@@ -1,0 +1,185 @@
+"""Shared benchmark substrate: tiny trained models, priors, eval prompts.
+
+Everything is cached under benchmarks/.cache (keyed by config) so the table
+functions are independently runnable; a fresh run trains two tiny LMs for a
+few hundred steps on the synthetic corpus (CPU, ~1 min each).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from functools import partial
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import latest_step, restore_checkpoint, save_checkpoint
+from repro.core import GlassConfig, NPSConfig, build_masks, compute_global_prior
+from repro.core.importance import global_activation_stats, global_impact_stats, finalize
+from repro.core.nps import teacher_forced_batch
+from repro.data.synthetic import CorpusConfig, MixtureCorpus, SyntheticCorpus, shifted_corpus
+from repro.data.tokenizer import BOS_ID
+from repro.models import ModelConfig, build_model
+from repro.models import transformer
+from repro.train.loop import TrainConfig, train
+
+CACHE = Path(__file__).parent / ".cache"
+
+TINY_LLAMA = ModelConfig(
+    name="bench-llama", family="dense", n_layers=4, d_model=128, n_heads=4,
+    n_kv_heads=2, head_dim=32, d_ff=384, vocab_size=300, ffn_act="silu",
+    gated_ffn=True, tie_embeddings=True, dtype="float32", remat="none",
+)
+TINY_GEMMA = TINY_LLAMA.replace(
+    name="bench-gemma", ffn_act="gelu", embed_scale=True, logit_softcap=30.0,
+)
+
+NPS_CFG = NPSConfig(n_seqs=48, seq_len=96, batch=16, bos_id=BOS_ID, top_k=20)
+TRAIN_STEPS = 600
+# the training distribution is a 3-domain mixture: prompt-local statistics
+# then reveal the request's domain, which the (domain-averaged) global prior
+# cannot — the regime where the paper's local/global fusion matters.
+TRAIN_CORPUS = MixtureCorpus(seed=1)
+
+
+def trained_model(cfg: ModelConfig, steps: int = TRAIN_STEPS):
+    """Train (or load cached) tiny model on the synthetic corpus."""
+    model = build_model(cfg)
+    ckdir = CACHE / f"{cfg.name}-mix-{steps}"
+    params_tpl = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    if latest_step(ckdir) is not None:
+        _, tree, _ = restore_checkpoint(ckdir, {"params": params_tpl})
+        params = jax.tree.map(jnp.asarray, tree["params"])
+        return model, params
+    out = train(
+        model,
+        TrainConfig(steps=steps, batch=16, seq=128, log_every=100),
+        TRAIN_CORPUS,
+        log=lambda s: None,
+    )
+    save_checkpoint(ckdir, steps, {"params": out["params"]})
+    return model, out["params"]
+
+
+def priors_for(model, params, *, use_cache_key: str) -> Dict[str, jax.Array]:
+    """A/I priors from NPS and from the 'external corpus' (shifted synthetic)."""
+    ck = CACHE / f"priors-mix-{use_cache_key}"
+    tpl = {
+        "A_nps": jnp.zeros((model.cfg.n_layers, model.cfg.d_ff)),
+        "I_nps": jnp.zeros((model.cfg.n_layers, model.cfg.d_ff)),
+        "A_corpus": jnp.zeros((model.cfg.n_layers, model.cfg.d_ff)),
+        "I_corpus": jnp.zeros((model.cfg.n_layers, model.cfg.d_ff)),
+    }
+    if latest_step(ck) is not None:
+        _, tree, _ = restore_checkpoint(ck, tpl)
+        return jax.tree.map(jnp.asarray, tree)
+    rng = jax.random.key(11)
+    out = {
+        "A_nps": compute_global_prior(model, params, rng, NPS_CFG, "A"),
+        "I_nps": compute_global_prior(model, params, rng, NPS_CFG, "I"),
+    }
+    # corpus prior: teacher-forced batches from the shifted corpus
+    corpus = shifted_corpus()
+    from repro.data.pipeline import PackedLM
+
+    pipe = PackedLM(corpus, batch=16, seq=NPS_CFG.seq_len)
+    batches = [pipe.next_batch() for _ in range(NPS_CFG.n_seqs // 16)]
+    batches = [{k: jnp.asarray(v) for k, v in b.items() if k != "mask"} for b in batches]
+    out["A_corpus"] = finalize(global_activation_stats(model, params, batches))
+    out["I_corpus"] = finalize(global_impact_stats(model, params, batches))
+    save_checkpoint(ck, 0, out)
+    return out
+
+
+def eval_prompts(n: int, prompt_len: int = 8, seed: int = 99) -> jax.Array:
+    """Short OUT-OF-DISTRIBUTION prompts — the paper's hard regime: its LG
+    benchmark (Alpaca) is instruction text, distributionally unlike the
+    models' pretraining mix, so prompt-local evidence genuinely differs from
+    the global prior.  We mirror that with prompts from the *shifted* corpus
+    (different word inventory/statistics than the training corpus)."""
+    from repro.data.tokenizer import encode
+
+    rows = []
+    i = 10_000 + seed
+    while len(rows) < n:
+        # held-out documents from ONE domain of the training mixture: short,
+        # domain-revealing prompts (the model must commit to that domain)
+        ids = encode(TRAIN_CORPUS.domain_document(len(rows) % TRAIN_CORPUS.n_domains, i))
+        i += 1
+        if len(ids) >= prompt_len:
+            rows.append(ids[:prompt_len])
+    return jnp.asarray(np.stack(rows), jnp.int32)
+
+
+@partial(jax.jit, static_argnums=(0, 3))
+def _dense_generate_jit(model, params, prompt: jax.Array, max_new: int) -> jax.Array:
+    S = prompt.shape[1]
+    logits, cache, _ = model.prefill(params, {"tokens": prompt}, S + max_new)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+
+    def body(carry, i):
+        cache, tok = carry
+        lg, cache = model.decode_step(params, tok, cache, S + i)
+        nxt = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return (cache, nxt), tok[:, 0]
+
+    (_, _), toks = jax.lax.scan(body, (cache, tok), jnp.arange(max_new, dtype=jnp.int32))
+    return jnp.concatenate([prompt, toks.T], axis=1)
+
+
+def dense_generate(model, params, prompt: jax.Array, max_new: int) -> jax.Array:
+    """Greedy dense continuation of one prompt (1, S) -> (1, S + max_new)."""
+    return _dense_generate_jit(model, params, prompt, max_new)
+
+
+def sparse_eval_logits(
+    model, params, full_seq: jax.Array, prompt_len: int,
+    prior: Optional[jax.Array], gcfg: Optional[GlassConfig],
+) -> jax.Array:
+    """Teacher-forced logits under a GLASS mask built from *prompt-only*
+    prefill stats (per sample) — or dense when gcfg is None."""
+    if gcfg is None:
+        return model.logits(params, {"tokens": full_seq})[0]
+    _, _, stats = model.prefill(params, {"tokens": full_seq[:, :prompt_len]}, prompt_len + 1)
+    masks = build_masks(stats, prior, gcfg)
+    return model.logits(params, {"tokens": full_seq}, ffn_masks=masks.mask)[0]
+
+
+@dataclass
+class EvalBundle:
+    model: object
+    params: object
+    priors: Dict[str, jax.Array]
+    sequences: List[jax.Array]  # dense trajectories (1, S_total)
+    dense_logits: List[jax.Array]
+    prompt_len: int
+
+
+def build_bundle(cfg: ModelConfig, n_samples: int = 16, prompt_len: int = 8, gen_len: int = 48) -> EvalBundle:
+    model, params = trained_model(cfg)
+    priors = priors_for(model, params, use_cache_key=cfg.name)
+    ck = CACHE / f"bundle-mix-{cfg.name}-{n_samples}-{prompt_len}-{gen_len}"
+    S_total = prompt_len + gen_len
+    tpl = {
+        "seqs": jnp.zeros((n_samples, S_total), jnp.int32),
+        "logits": jnp.zeros((n_samples, S_total, cfg.vocab_size)),
+    }
+    if latest_step(ck) is not None:
+        _, tree, _ = restore_checkpoint(ck, tpl)
+        seqs = [jnp.asarray(tree["seqs"][i : i + 1]) for i in range(n_samples)]
+        dls = [jnp.asarray(tree["logits"][i]) for i in range(n_samples)]
+        return EvalBundle(model, params, priors, seqs, dls, prompt_len)
+    prompts = eval_prompts(n_samples, prompt_len)
+    seqs, dls = [], []
+    for i in range(n_samples):
+        seq = dense_generate(model, params, prompts[i : i + 1], gen_len)
+        seqs.append(seq)
+        dls.append(model.logits(params, {"tokens": seq})[0])
+    save_checkpoint(
+        ck, 0,
+        {"seqs": jnp.concatenate(seqs, 0), "logits": jnp.stack(dls)},
+    )
+    return EvalBundle(model, params, priors, seqs, dls, prompt_len)

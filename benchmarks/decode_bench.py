@@ -1,0 +1,71 @@
+"""Decode speed benchmark (Fig. 5 analogue).
+
+On-device wall-clock speedups are phone numbers in the paper; here we report
+(a) measured CPU wall-time of dense vs GLASS-compact decode steps on the
+tiny model (the compute-reduction effect), and (b) the analytic decode-step
+byte/FLOP reductions for each assigned architecture at 50% density (the
+memory-residency effect that dominated the paper's Gemma-7B 11x case).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ASSIGNED, get_config
+from repro.core import GlassConfig, build_masks, compact_params
+from repro.launch.specs import compact_config
+
+from .common import TINY_LLAMA, build_bundle
+
+
+def _time_step(fn, *args, iters=30) -> float:
+    fn(*args)  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def measured_speedup() -> Tuple[List[dict], float]:
+    b = build_bundle(TINY_LLAMA, n_samples=2)
+    model, params = b.model, b.params
+    toks = b.sequences[0][:, :8]
+    B, S = toks.shape
+    logits, cache, stats = model.prefill(params, {"tokens": toks}, 64)
+    masks = build_masks(stats, b.priors["A_nps"], GlassConfig(density=0.5))
+    compact = compact_params(model, params, masks.idx)
+    tok = toks[:, :1]
+
+    dense_fn = jax.jit(lambda p, c, t: model.decode_step(p, t, c, jnp.int32(8)))
+    comp_fn = jax.jit(
+        lambda p, c, t, cl: model.decode_step(p, t, c, jnp.int32(8), compact_layers=cl)
+    )
+    t_dense = _time_step(lambda p, c, t: dense_fn(p, c, t)[0], params, cache, tok)
+    t_comp = _time_step(lambda p, c, t: comp_fn(p, c, t, compact)[0], params, cache, tok)
+    rows = [dict(step="dense", us=t_dense), dict(step="glass_compact", us=t_comp)]
+    return rows, t_dense / t_comp
+
+
+def analytic_reductions(density: float = 0.5) -> Tuple[List[dict], float]:
+    """Per assigned arch: decode-step FFN weight-bytes + FLOPs at 50%."""
+    rows = []
+    ratios = []
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        dcfg = compact_config(cfg, density)
+        full, comp = cfg.n_active_params(), dcfg.n_active_params()
+        rows.append(
+            dict(
+                arch=arch,
+                active_params_dense=full,
+                active_params_glass=comp,
+                decode_bytes_ratio=comp / full,
+            )
+        )
+        ratios.append(full / comp)
+    return rows, float(np.mean(ratios))

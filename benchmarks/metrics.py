@@ -1,0 +1,52 @@
+"""Paper evaluation metrics (App. B.2): dense-trajectory PPL and top-100 KLD.
+
+Both are deviation-from-dense metrics: the dense model's own generation is
+the reference trajectory; PPL measures how unlikely that trajectory is under
+the sparsified model, KLD compares next-token distributions restricted to
+the 100 most probable tokens under the dense model (renormalized).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_trajectory_ppl(
+    sparse_logits: jax.Array,  # (S, V) teacher-forced over [prompt + dense gen]
+    tokens: jax.Array,  # (S,) the full sequence (labels are tokens shifted)
+    gen_start: int,  # first generated position (loss only over generation)
+) -> float:
+    lp = jax.nn.log_softmax(sparse_logits.astype(jnp.float32), axis=-1)
+    # logits[t] predicts tokens[t+1]
+    nll = -jnp.take_along_axis(lp[:-1], tokens[1:, None], axis=-1)[:, 0]
+    region = nll[gen_start - 1 :]
+    return float(jnp.exp(jnp.mean(region)))
+
+
+def top100_kld(
+    dense_logits: jax.Array,  # (S, V)
+    sparse_logits: jax.Array,  # (S, V)
+    gen_start: int,
+    k: int = 100,
+) -> float:
+    d = dense_logits.astype(jnp.float32)[gen_start - 1 : -1]
+    s = sparse_logits.astype(jnp.float32)[gen_start - 1 : -1]
+    k = min(k, d.shape[-1])
+    vals, idx = jax.lax.top_k(d, k)
+    dp = jax.nn.softmax(vals, axis=-1)
+    sp_sel = jnp.take_along_axis(s, idx, axis=-1)
+    # renormalize the sparse distribution over the same support
+    sp = jax.nn.softmax(sp_sel, axis=-1)
+    kl = jnp.sum(dp * (jnp.log(dp + 1e-20) - jnp.log(sp + 1e-20)), axis=-1)
+    return float(jnp.mean(kl))
+
+
+def token_accuracy(logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None) -> float:
+    pred = jnp.argmax(logits, axis=-1)
+    ok = (pred == labels).astype(jnp.float32)
+    if mask is not None:
+        return float(jnp.sum(ok * mask) / jnp.maximum(jnp.sum(mask), 1.0))
+    return float(jnp.mean(ok))

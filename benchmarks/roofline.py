@@ -1,0 +1,85 @@
+"""Roofline reporter: aggregates dry-run JSON records into the per-cell
+three-term table (EXPERIMENTS.md §Roofline) and computes before/after deltas
+for the §Perf hillclimb log.
+
+Usage:
+    python -m benchmarks.roofline [--dir benchmarks/dryrun_results] [--csv]
+    python -m benchmarks.roofline --compare baseline_dir new_dir
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List
+
+
+def load_records(directory: str | Path) -> List[Dict]:
+    recs = []
+    for p in sorted(Path(directory).glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def fmt_table(recs: List[Dict], csv: bool = False) -> str:
+    cols = [
+        "arch", "shape", "mesh", "compute_ms", "memory_ms", "collective_ms",
+        "bottleneck", "useful", "mem_GiB", "fits", "roofline_frac",
+    ]
+    rows = []
+    for r in recs:
+        t = r["roofline_terms_s"]
+        dom = max(t.values())
+        frac = t["compute_s"] / dom if dom > 0 else 0.0
+        mesh = "x".join(str(v) for v in r["mesh"].values())
+        rows.append([
+            r["arch"], r["shape"], mesh,
+            f"{t['compute_s'] * 1e3:.1f}", f"{t['memory_s'] * 1e3:.1f}",
+            f"{t['collective_s'] * 1e3:.1f}", r["bottleneck"].replace("_s", ""),
+            f"{(r.get('useful_flops_ratio') or 0):.2f}",
+            f"{r['memory']['peak_bytes'] / 1024**3:.1f}",
+            "y" if r["fits_hbm_16g"] else "n",
+            f"{frac:.2f}",
+        ])
+    if csv:
+        out = [",".join(cols)]
+        out += [",".join(str(c) for c in row) for row in rows]
+        return "\n".join(out)
+    widths = [max(len(str(x)) for x in [c] + [row[i] for row in rows]) for i, c in enumerate(cols)]
+    lines = ["| " + " | ".join(c.ljust(w) for c, w in zip(cols, widths)) + " |"]
+    lines.append("|" + "|".join("-" * (w + 2) for w in widths) + "|")
+    for row in rows:
+        lines.append("| " + " | ".join(str(c).ljust(w) for c, w in zip(row, widths)) + " |")
+    return "\n".join(lines)
+
+
+def compare(base_dir: str, new_dir: str) -> str:
+    base = {(r["arch"], r["shape"]): r for r in load_records(base_dir)}
+    new = {(r["arch"], r["shape"]): r for r in load_records(new_dir)}
+    lines = ["arch,shape,term,before_ms,after_ms,delta_pct"]
+    for key in sorted(set(base) & set(new)):
+        b, n = base[key], new[key]
+        for term in ("compute_s", "memory_s", "collective_s"):
+            tb = b["roofline_terms_s"][term] * 1e3
+            tn = n["roofline_terms_s"][term] * 1e3
+            if tb > 0:
+                lines.append(
+                    f"{key[0]},{key[1]},{term},{tb:.1f},{tn:.1f},{100 * (tn - tb) / tb:+.1f}"
+                )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/dryrun_results")
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--compare", nargs=2, metavar=("BASE", "NEW"))
+    args = ap.parse_args()
+    if args.compare:
+        print(compare(*args.compare))
+        return
+    print(fmt_table(load_records(args.dir), csv=args.csv))
+
+
+if __name__ == "__main__":
+    main()

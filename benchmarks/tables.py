@@ -1,0 +1,173 @@
+"""One benchmark function per paper table/figure (reduced scale, same
+protocol).  Each returns (rows, derived) where ``derived`` is the headline
+number the CSV reports.
+
+  table1  — classification / short-generation parity (proxy: next-token
+            accuracy + long-prompt PPL, GLASS vs GRIFFIN)
+  table2  — PPL + top-100 KLD at 50% density: GRIFFIN vs A/I-GLASS (NPS)
+  table3  — density sweep 90..10: NPS prior vs corpus prior
+  table5  — oracle-overlap Jaccard: Local / Global / Global-Local
+  table6  — lambda ablation {0, 0.5, 1} end-to-end PPL
+  fig4    — lambda sensitivity sweep
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GlassConfig, build_masks
+from repro.core.oracle import jaccard_vs_oracle, oracle_masks
+
+from .common import TINY_GEMMA, TINY_LLAMA, EvalBundle, build_bundle, sparse_eval_logits
+from .metrics import dense_trajectory_ppl, token_accuracy, top100_kld
+
+_BUNDLES: Dict[str, EvalBundle] = {}
+
+
+def bundle(name: str = "llama") -> EvalBundle:
+    if name not in _BUNDLES:
+        cfg = {"llama": TINY_LLAMA, "gemma": TINY_GEMMA}[name]
+        _BUNDLES[name] = build_bundle(cfg)
+    return _BUNDLES[name]
+
+
+def _eval_variant(b: EvalBundle, prior_key: str | None, lam: float, density: float) -> Tuple[float, float]:
+    """Mean (PPL, KLD) across samples for one GLASS variant."""
+    gcfg = GlassConfig(density=density, lam=lam)
+    prior = b.priors[prior_key] if prior_key else b.priors["A_nps"]
+    ppls, klds = [], []
+    for seq, dl in zip(b.sequences, b.dense_logits):
+        sl = sparse_eval_logits(b.model, b.params, seq, b.prompt_len, prior, gcfg)
+        ppls.append(dense_trajectory_ppl(sl, seq[0], b.prompt_len))
+        klds.append(top100_kld(dl, sl, b.prompt_len))
+    return float(np.mean(ppls)), float(np.mean(klds))
+
+
+def table2_ppl_kld() -> Tuple[List[dict], float]:
+    """GRIFFIN vs A-GLASS vs I-GLASS at 50% density (both tiny models)."""
+    rows = []
+    best_imp = 0.0
+    for mname in ("llama",):  # single backbone at mixture scale (CPU budget)
+        b = bundle(mname)
+        grf_ppl, grf_kld = _eval_variant(b, None, lam=0.0, density=0.5)
+        for variant, key in [("A-GLASS", "A_nps"), ("I-GLASS", "I_nps")]:
+            ppl, kld = _eval_variant(b, key, lam=0.5, density=0.5)
+            imp_ppl = 100.0 * (grf_ppl - ppl) / grf_ppl
+            imp_kld = 100.0 * (grf_kld - kld) / grf_kld
+            best_imp = max(best_imp, imp_ppl)
+            rows.append(dict(model=mname, variant=variant, ppl=ppl, kld=kld,
+                             griffin_ppl=grf_ppl, griffin_kld=grf_kld,
+                             imp_ppl_pct=imp_ppl, imp_kld_pct=imp_kld))
+    return rows, best_imp
+
+
+def _table3_row(density: float) -> dict:
+    b = bundle("llama")
+    _, grf = _eval_variant(b, None, lam=0.0, density=density)
+    row = dict(density=density, griffin_kld=grf)
+    for variant in ("A", "I"):
+        for src in ("nps", "corpus"):
+            _, kld = _eval_variant(b, f"{variant}_{src}", lam=0.5, density=density)
+            row[f"{variant}_{src}_kld"] = kld
+    return row
+
+
+def table3_density_sweep() -> Tuple[List[dict], float]:
+    """KLD across densities 90..10: GRIFFIN vs A/I-GLASS x {NPS, corpus}.
+
+    One subprocess per density: this is the heaviest table (25 variant
+    evaluations x 16 samples) and the container's XLA CPU ORC JIT fails
+    intermittently past a few hundred compiled programs per process."""
+    import json as _json
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    root = Path(__file__).parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{root / 'src'}{os.pathsep}{root}{os.pathsep}" + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = env.get("XLA_FLAGS", "") + " --xla_cpu_parallel_codegen_split_count=1"
+    rows = []
+    for density in (0.9, 0.7, 0.5, 0.3, 0.1):
+        code = (
+            "import json\nfrom benchmarks.tables import _table3_row\n"
+            f"print('ROW:' + json.dumps(_table3_row({density})))\n"
+        )
+        proc = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True, env=env,
+            timeout=1800, cwd=root,
+        )
+        for line in proc.stdout.splitlines():
+            if line.startswith("ROW:"):
+                rows.append(_json.loads(line[4:]))
+        if proc.returncode != 0:
+            raise RuntimeError(proc.stderr[-1500:])
+    nps_wins = sum(
+        1 for r in rows for v in ("A", "I") if r[f"{v}_nps_kld"] <= r[f"{v}_corpus_kld"]
+    )
+    return rows, 100.0 * nps_wins / (2 * len(rows))
+
+
+def table5_oracle_jaccard() -> Tuple[List[dict], float]:
+    """Jaccard to the decoding-time oracle set at 50% sparsity."""
+    b = bundle("llama")
+    res = {"local": [], "global": [], "fused": []}
+    for seq in b.sequences:
+        _, orc = oracle_masks(b.model, b.params, seq, b.prompt_len, density=0.5)
+        _, _, stats = b.model.prefill(b.params, {"tokens": seq[:, : b.prompt_len]}, b.prompt_len + 1)
+        for name, lam in [("local", 0.0), ("global", 1.0), ("fused", 0.5)]:
+            ms = build_masks(stats, b.priors["A_nps"], GlassConfig(density=0.5, lam=lam))
+            res[name].append(float(jaccard_vs_oracle(ms.mask, orc)["mean"]))
+    rows = [
+        dict(variant=k, mean_jaccard=float(np.mean(v)), std=float(np.std(v)))
+        for k, v in res.items()
+    ]
+    fused = float(np.mean(res["fused"]))
+    single = max(float(np.mean(res["local"])), float(np.mean(res["global"])))
+    return rows, fused - single
+
+
+def table6_lambda_ablation() -> Tuple[List[dict], float]:
+    b = bundle("llama")
+    rows = []
+    ppls = {}
+    for name, lam in [("local_only", 0.0), ("global_only", 1.0), ("fused", 0.5)]:
+        ppl, kld = _eval_variant(b, "I_nps", lam=lam, density=0.5)
+        ppls[name] = ppl
+        rows.append(dict(variant=name, lam=lam, ppl=ppl, kld=kld))
+    imp = 100.0 * (ppls["local_only"] - ppls["fused"]) / ppls["local_only"]
+    return rows, imp
+
+
+def fig4_lambda_sweep() -> Tuple[List[dict], float]:
+    b = bundle("llama")
+    rows = []
+    for lam in np.linspace(0.0, 1.0, 11):
+        ppl, _ = _eval_variant(b, "I_nps", lam=float(lam), density=0.5)
+        rows.append(dict(lam=round(float(lam), 2), ppl=ppl))
+    best = min(rows, key=lambda r: r["ppl"])
+    return rows, best["lam"]
+
+
+def table1_short_tasks() -> Tuple[List[dict], float]:
+    """Classification/short-gen parity proxy: with long prompts, GLASS and
+    GRIFFIN should be nearly identical (paper Tab. 1)."""
+    b = bundle("llama")
+    rows = []
+    diffs = []
+    # long-prompt regime: use the dense trajectory itself as "prompt"
+    for seq, dl in zip(b.sequences[:8], b.dense_logits[:8]):
+        long_pl = seq.shape[1] - 8
+        _, _, stats = b.model.prefill(b.params, {"tokens": seq[:, :long_pl]}, long_pl + 1)
+        accs = {}
+        for name, lam in [("griffin", 0.0), ("glass", 0.5)]:
+            ms = build_masks(stats, b.priors["I_nps"], GlassConfig(density=0.5, lam=lam))
+            sl = b.model.logits(b.params, {"tokens": seq}, ffn_masks=ms.mask)[0]
+            accs[name] = token_accuracy(sl[long_pl - 1 : -1], seq[0, long_pl:])
+        diffs.append(abs(accs["glass"] - accs["griffin"]))
+        rows.append(dict(sample=len(rows), griffin_acc=accs["griffin"], glass_acc=accs["glass"]))
+    return rows, float(np.mean(diffs))

@@ -1,0 +1,152 @@
+"""Checkpointing: atomic, rotated, async-capable, elastically resharding.
+
+Layout per step:  <dir>/step_00001234/
+    manifest.json   — tree structure, leaf shapes/dtypes, step, extra state
+    <flat.leaf.path>.npy — one file per leaf (full logical array)
+
+Leaves are stored as *full logical arrays* (gathered), so a checkpoint is
+mesh-independent: restore onto any mesh by passing target shardings —
+elastic scaling (fewer/more nodes after a failure) is a plain restore.
+Writes go to a tmp dir + atomic rename; a crash mid-save never corrupts the
+latest complete checkpoint.  ``AsyncCheckpointer`` moves serialization off
+the training thread (device->host copy happens synchronously, disk I/O
+async), the standard large-run pattern.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "###"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        flat[key] = leaf
+    return flat
+
+
+def _unflatten_into(template, flat: Dict[str, Any]):
+    keys = []
+
+    def fill(path, leaf):
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        keys.append(key)
+        return flat[key]
+
+    return jax.tree_util.tree_map_with_path(fill, template)
+
+
+def save_checkpoint(
+    directory: str | Path,
+    step: int,
+    tree,
+    extra: Optional[Dict] = None,
+    keep: int = 3,
+) -> Path:
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f".tmp_step_{step:08d}_{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat = _flatten(tree)
+    manifest = {"step": int(step), "extra": extra or {}, "leaves": {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(tmp / f"{key}.npy", arr)
+        manifest["leaves"][key] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic on the same filesystem
+    _rotate(directory, keep)
+    return final
+
+
+def _rotate(directory: Path, keep: int):
+    steps = sorted(p for p in directory.glob("step_*") if p.is_dir())
+    for old in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(old, ignore_errors=True)
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    directory = Path(directory)
+    steps = sorted(p.name for p in directory.glob("step_*") if (p / "manifest.json").exists())
+    if not steps:
+        return None
+    return int(steps[-1].split("_")[1])
+
+
+def restore_checkpoint(
+    directory: str | Path,
+    template,
+    step: Optional[int] = None,
+    shardings=None,
+) -> Tuple[int, Any, Dict]:
+    """Restore into the structure of ``template``.
+
+    ``shardings``: optional pytree (same structure) of NamedSharding — leaves
+    are device_put with the *target* sharding, so the checkpoint can be
+    loaded onto a different mesh than it was saved from (elastic restart)."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = directory / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    flat_shard = _flatten(shardings) if shardings is not None else None
+
+    flat = {}
+    for key, info in manifest["leaves"].items():
+        arr = np.load(d / f"{key}.npy")
+        if flat_shard is not None:
+            arr = jax.device_put(arr, flat_shard[key])
+        flat[key] = arr
+    tree = _unflatten_into(template, flat)
+    return manifest["step"], tree, manifest.get("extra", {})
+
+
+class AsyncCheckpointer:
+    """Off-thread checkpoint writer with at-most-one outstanding save."""
+
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.directory = Path(directory)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra, self.keep)
+            except BaseException as e:  # noqa: BLE001 — surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()

@@ -1,0 +1,24 @@
+from . import (
+    dbrx_132b,
+    gemma2_27b,
+    gemma2_9b,
+    gemma_7b,
+    granite_8b,
+    grok1_314b,
+    llama3_8b,
+    mistral_7b,
+    qwen2_vl_72b,
+    rwkv6_7b,
+    whisper_large_v3,
+    yi_9b,
+    zamba2_7b,
+)
+from .registry import get_config, list_archs, tiny_variant
+
+ASSIGNED = [
+    "gemma2-27b", "gemma2-9b", "yi-9b", "granite-8b", "qwen2-vl-72b",
+    "grok-1-314b", "dbrx-132b", "zamba2-7b", "whisper-large-v3", "rwkv6-7b",
+]
+PAPER_MODELS = ["llama3-8b", "mistral-7b", "gemma-7b"]
+
+__all__ = ["ASSIGNED", "PAPER_MODELS", "get_config", "list_archs", "tiny_variant"]

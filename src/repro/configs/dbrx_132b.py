@@ -1,0 +1,27 @@
+"""DBRX 132B [hf:databricks/dbrx-base; unverified]: 16 experts top-4,
+fine-grained MoE; experts divide the data axis -> clean DP+EP."""
+from ..models.common import ModelConfig
+from .registry import register
+
+
+@register("dbrx-132b")
+def dbrx_132b() -> ModelConfig:
+    return ModelConfig(
+        name="dbrx-132b",
+        family="moe",
+        n_layers=40,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=10752,
+        vocab_size=100352,
+        ffn_act="silu",
+        gated_ffn=True,
+        n_experts=16,
+        n_experts_per_tok=4,
+        moe_strategy="dropping",
+        rope_theta=500000.0,
+        tie_embeddings=False,
+        gqa_layout="repeated",
+    )

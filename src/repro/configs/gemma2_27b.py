@@ -1,0 +1,31 @@
+"""Gemma 2 27B [arXiv:2408.00118; hf]: local+global alternating attention,
+logit/attn softcaps, GeGLU, sandwich norms, tied embeddings."""
+from ..models.common import ModelConfig
+from .registry import register
+
+
+@register("gemma2-27b")
+def gemma2_27b() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-27b",
+        family="dense",
+        n_layers=46,
+        d_model=4608,
+        n_heads=32,
+        n_kv_heads=16,
+        head_dim=128,
+        d_ff=36864,
+        vocab_size=256000,
+        ffn_act="gelu",
+        gated_ffn=True,
+        rope_theta=10000.0,
+        attn_softcap=50.0,
+        logit_softcap=30.0,
+        sliding_window=4096,
+        attn_pattern="local_global",
+        sandwich_norms=True,
+        embed_scale=True,
+        tie_embeddings=True,
+        gqa_layout="grouped",  # kv=16 divides the model axis
+        norm_eps=1e-6,
+    )

@@ -1,0 +1,28 @@
+"""Gemma 2 9B [arXiv:2408.00118; hf]."""
+from ..models.common import ModelConfig
+from .registry import register
+
+
+@register("gemma2-9b")
+def gemma2_9b() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-9b",
+        family="dense",
+        n_layers=42,
+        d_model=3584,
+        n_heads=16,
+        n_kv_heads=8,
+        head_dim=256,
+        d_ff=14336,
+        vocab_size=256000,
+        ffn_act="gelu",
+        gated_ffn=True,
+        attn_softcap=50.0,
+        logit_softcap=30.0,
+        sliding_window=4096,
+        attn_pattern="local_global",
+        sandwich_norms=True,
+        embed_scale=True,
+        tie_embeddings=True,
+        gqa_layout="repeated",  # kv=8 < model axis; q heads 16 divide it
+    )

@@ -1,0 +1,23 @@
+"""Gemma 7B [arXiv:2403.08295] — paper evaluation model (GeGLU, MHA)."""
+from ..models.common import ModelConfig
+from .registry import register
+
+
+@register("gemma-7b")
+def gemma_7b() -> ModelConfig:
+    return ModelConfig(
+        name="gemma-7b",
+        family="dense",
+        n_layers=28,
+        d_model=3072,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=256,
+        d_ff=24576,
+        vocab_size=256000,
+        ffn_act="gelu",
+        gated_ffn=True,
+        embed_scale=True,
+        tie_embeddings=True,
+        gqa_layout="grouped",
+    )

@@ -1,0 +1,24 @@
+"""Granite 8B (code) [arXiv:2405.04324; hf]: llama-arch."""
+from ..models.common import ModelConfig
+from .registry import register
+
+
+@register("granite-8b")
+def granite_8b() -> ModelConfig:
+    return ModelConfig(
+        name="granite-8b",
+        family="dense",
+        n_layers=36,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        vocab_size=49152,
+        ffn_act="silu",
+        gated_ffn=True,
+        rope_theta=10000000.0,
+        tie_embeddings=False,
+        gqa_layout="repeated",
+        norm_eps=1e-5,
+    )

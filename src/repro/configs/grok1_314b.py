@@ -1,0 +1,32 @@
+"""Grok-1 314B [hf:xai-org/grok-1; unverified]: 8 experts top-2, softcaps.
+
+Expert count (8) does not divide the 16-wide data axis, so the planner
+falls back to FSDP sharding of expert d_model dims over data (see DESIGN.md;
+expert-replication x2 is the hillclimb alternative)."""
+from ..models.common import ModelConfig
+from .registry import register
+
+
+@register("grok-1-314b")
+def grok1_314b() -> ModelConfig:
+    return ModelConfig(
+        name="grok-1-314b",
+        family="moe",
+        n_layers=64,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=32768,
+        vocab_size=131072,
+        ffn_act="gelu",
+        gated_ffn=True,
+        n_experts=8,
+        n_experts_per_tok=2,
+        moe_strategy="dropping",
+        attn_softcap=30.0,
+        logit_softcap=30.0,
+        embed_scale=True,
+        tie_embeddings=False,
+        gqa_layout="repeated",
+    )

@@ -1,0 +1,25 @@
+"""Mistral 7B [arXiv:2310.06825] — paper evaluation model."""
+from ..models.common import ModelConfig
+from .registry import register
+
+
+@register("mistral-7b")
+def mistral_7b() -> ModelConfig:
+    return ModelConfig(
+        name="mistral-7b",
+        family="dense",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        vocab_size=32000,
+        ffn_act="silu",
+        gated_ffn=True,
+        sliding_window=4096,
+        rope_theta=10000.0,
+        tie_embeddings=False,
+        gqa_layout="repeated",
+        norm_eps=1e-5,
+    )

@@ -1,0 +1,28 @@
+"""Qwen2-VL 72B [arXiv:2409.12191; hf]: M-RoPE; vision frontend is a STUB —
+input_specs provide precomputed patch embeddings, positions are the text
+stream (t=h=w) by default."""
+from ..models.common import ModelConfig
+from .registry import register
+
+
+@register("qwen2-vl-72b")
+def qwen2_vl_72b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-72b",
+        family="vlm",
+        n_layers=80,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=29568,
+        vocab_size=152064,
+        ffn_act="silu",
+        gated_ffn=True,
+        rope_type="mrope",
+        mrope_sections=(16, 24, 24),  # half-dim units, sum = head_dim // 2
+        rope_theta=1000000.0,
+        tie_embeddings=False,
+        gqa_layout="repeated",
+        norm_eps=1e-6,
+    )

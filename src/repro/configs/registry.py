@@ -1,0 +1,58 @@
+"""Architecture registry: ``--arch <id>`` resolution + tiny test variants."""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from ..models.common import ModelConfig
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch '{name}'; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def tiny_variant(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests: small depth/width,
+    few experts, tiny vocab — preserves every structural feature (GQA ratio,
+    softcaps, alternation, MoE routing, SSM layout, enc-dec wiring)."""
+    kw = dict(
+        name=f"{cfg.name}-tiny",
+        n_layers=4 if cfg.family != "hybrid" else 5,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, round(4 * cfg.n_kv_heads / max(cfg.n_heads, 1))),
+        head_dim=16,
+        d_ff=128,
+        vocab_size=199,
+        dtype="float32",
+        remat="none",
+        max_positions=4096,
+    )
+    if cfg.family == "moe":
+        kw.update(n_experts=4, n_experts_per_tok=min(2, cfg.n_experts_per_tok), moe_chunk=16)
+    if cfg.family == "hybrid":
+        kw.update(ssm_state=16, mamba_headdim=16, attn_every=2)
+    if cfg.family == "ssm":
+        kw.update(rwkv_headdim=16, rwkv_lora_rank=8)
+    if cfg.is_encoder_decoder:
+        kw.update(n_enc_layers=2, n_layers=2)
+    if cfg.rope_type == "mrope":
+        kw.update(mrope_sections=(4, 2, 2))
+    if cfg.sliding_window:
+        kw.update(sliding_window=8)
+    return cfg.replace(**kw)

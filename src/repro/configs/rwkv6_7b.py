@@ -1,0 +1,26 @@
+"""RWKV6 (Finch) 7B [arXiv:2404.05892; hf]: attention-free, data-dependent
+decay time-mix + squared-ReLU channel-mix (the GLASS target)."""
+from ..models.common import ModelConfig
+from .registry import register
+
+
+@register("rwkv6-7b")
+def rwkv6_7b() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-7b",
+        family="ssm",
+        n_layers=32,
+        d_model=4096,
+        n_heads=64,  # = d_model / rwkv_headdim (bookkeeping only)
+        n_kv_heads=64,
+        head_dim=64,
+        d_ff=14336,
+        vocab_size=65536,
+        ffn_act="relu2",
+        gated_ffn=False,
+        rope_type="none",
+        rwkv_headdim=64,
+        rwkv_lora_rank=64,
+        tie_embeddings=False,
+        norm_eps=1e-5,
+    )

@@ -1,0 +1,30 @@
+"""Whisper large-v3 [arXiv:2212.04356; unverified]: enc-dec, conv/mel
+frontend STUBBED (input_specs provide frame embeddings).  Non-gated GELU FFN
+(g_j = 1 branch of the paper's Eq. 3).  max_positions is extended beyond the
+real model's 448 to satisfy the assigned 32k decode shape (DESIGN.md §6)."""
+from ..models.common import ModelConfig
+from .registry import register
+
+
+@register("whisper-large-v3")
+def whisper_large_v3() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3",
+        family="encdec",
+        is_encoder_decoder=True,
+        n_layers=32,
+        n_enc_layers=32,
+        d_model=1280,
+        n_heads=20,
+        n_kv_heads=20,
+        head_dim=64,
+        d_ff=5120,
+        vocab_size=51866,
+        ffn_act="gelu",
+        gated_ffn=False,
+        rope_type="none",
+        max_positions=40960,
+        tie_embeddings=True,
+        gqa_layout="grouped",  # 20 heads don't divide the model axis: attention replicates
+        norm_eps=1e-5,
+    )

@@ -1,0 +1,24 @@
+"""Yi 9B [arXiv:2403.04652; hf]: llama-arch, deep GQA (kv=4)."""
+from ..models.common import ModelConfig
+from .registry import register
+
+
+@register("yi-9b")
+def yi_9b() -> ModelConfig:
+    return ModelConfig(
+        name="yi-9b",
+        family="dense",
+        n_layers=48,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=4,
+        head_dim=128,
+        d_ff=11008,
+        vocab_size=64000,
+        ffn_act="silu",
+        gated_ffn=True,
+        rope_theta=5000000.0,
+        tie_embeddings=False,
+        gqa_layout="repeated",
+        norm_eps=1e-5,
+    )

@@ -1,0 +1,29 @@
+"""Zamba2 7B [arXiv:2411.15242; unverified]: Mamba2 backbone with a shared
+attention(+MLP) block applied every 6 layers. GLASS targets the shared
+block's gated MLP (the only FFN in the architecture)."""
+from ..models.common import ModelConfig
+from .registry import register
+
+
+@register("zamba2-7b")
+def zamba2_7b() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b",
+        family="hybrid",
+        n_layers=81,
+        d_model=3584,
+        n_heads=32,
+        n_kv_heads=32,
+        head_dim=112,
+        d_ff=14336,
+        vocab_size=32000,
+        ffn_act="silu",
+        gated_ffn=True,
+        ssm_state=64,
+        ssm_conv=4,
+        mamba_headdim=64,
+        mamba_expand=2,
+        attn_every=6,
+        tie_embeddings=True,
+        gqa_layout="grouped",  # kv=32 divides the model axis
+    )

@@ -1,0 +1,136 @@
+"""Rank aggregation and critical-neuron selection (the heart of GLASS).
+
+Implements the paper's Sec. 3.4 / App. A:
+
+  * ``ranks_ascending`` — rank_up with stable deterministic tie-breaking by
+    neuron index (rank 1 = least important, rank m = most important);
+  * ``glass_scores``    — the weighted-Borda / Mallows-MAP consensus score
+    GLASS_j = (1-lambda) R^l_j + lambda R^g_j;
+  * selection modes:
+      - ``neuron``         exact global top-k (paper-faithful)
+      - ``block``          TPU-native: scores aggregated over blocks of
+                           ``block_size`` consecutive units, top blocks kept
+      - ``shard_balanced`` k/n_shards neurons per model-parallel shard so the
+                           compaction gather stays shard-local
+
+All selection functions return *sorted* index arrays (ascending) plus a
+binary mask; sorted gathers are friendlier to TPU memory systems and make
+results reproducible.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class GlassConfig:
+    density: float = 0.5  # fraction of FFN units kept
+    lam: float = 0.5  # lambda: weight of the global rank
+    variant: str = "I"  # "A" (activation) | "I" (impact) global prior
+    selection: str = "neuron"  # neuron | block | shard_balanced
+    block_size: int = 128
+    n_shards: int = 1
+
+    def k_of(self, m: int) -> int:
+        return max(1, int(round(self.density * m)))
+
+
+def ranks_ascending(scores: jax.Array, axis: int = -1) -> jax.Array:
+    """rank_up: smallest value -> rank 1, ..., largest -> rank m.
+
+    Ties broken deterministically by neuron index (lower index gets the lower
+    rank), implemented with a stable argsort.  Returns f32 ranks.
+    """
+    order = jnp.argsort(scores, axis=axis, stable=True)
+    inv = jnp.argsort(order, axis=axis, stable=True)  # position of j in order
+    return (inv + 1).astype(jnp.float32)
+
+
+def glass_scores(local: jax.Array, global_: jax.Array, lam: float) -> jax.Array:
+    """Fused consensus score per unit; larger = more important.
+
+    Monotone-invariant: both signals go through rank space first (Sec. 3.4).
+    lam = 0 recovers GRIFFIN (local-only); lam = 1 the static global mask.
+    """
+    rl = ranks_ascending(local)
+    rg = ranks_ascending(global_)
+    return (1.0 - lam) * rl + lam * rg
+
+
+def select_topk(scores: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Top-k with stable index tie-breaking.  scores (..., m).
+
+    Returns (idx (..., k) int32 sorted ascending, mask (..., m) f32)."""
+    order = jnp.argsort(-scores, axis=-1, stable=True)
+    idx = jnp.sort(order[..., :k], axis=-1).astype(jnp.int32)
+    m = scores.shape[-1]
+    onehot = jax.nn.one_hot(idx, m, dtype=jnp.float32)  # (..., k, m)
+    mask = jnp.sum(onehot, axis=-2)
+    return idx, mask
+
+
+def block_aggregate(scores: jax.Array, block_size: int) -> jax.Array:
+    """Mean score per block of ``block_size`` consecutive units."""
+    m = scores.shape[-1]
+    assert m % block_size == 0, (m, block_size)
+    return jnp.mean(scores.reshape(scores.shape[:-1] + (m // block_size, block_size)), axis=-1)
+
+
+def select_blocks(scores: jax.Array, k: int, block_size: int) -> Tuple[jax.Array, jax.Array]:
+    """Block-structured selection (TPU adaptation).
+
+    Keeps ceil(k / block_size) highest-mean-score blocks.  Returns
+    (block_idx (..., nb_keep) int32 sorted, mask (..., m) f32)."""
+    m = scores.shape[-1]
+    bsc = block_aggregate(scores, block_size)
+    nb_keep = max(1, (k + block_size - 1) // block_size)
+    bidx, bmask = select_topk(bsc, nb_keep)
+    mask = jnp.repeat(bmask, block_size, axis=-1)
+    return bidx, mask
+
+
+def select_shard_balanced(
+    scores: jax.Array, k: int, n_shards: int
+) -> Tuple[jax.Array, jax.Array]:
+    """k/n_shards per contiguous shard slice (model-parallel locality).
+
+    scores (..., m) with m % n_shards == 0 and k % n_shards == 0 required.
+    Returns (idx (..., k) int32 *global* indices sorted, mask (..., m))."""
+    m = scores.shape[-1]
+    assert m % n_shards == 0 and k % n_shards == 0, (m, k, n_shards)
+    per = m // n_shards
+    kper = k // n_shards
+    sh = scores.reshape(scores.shape[:-1] + (n_shards, per))
+    idx_l, mask_l = select_topk(sh, kper)  # (..., n_shards, kper) local indices
+    offs = (jnp.arange(n_shards, dtype=jnp.int32) * per)[..., None]
+    idx = (idx_l + offs).reshape(scores.shape[:-1] + (k,))
+    mask = mask_l.reshape(scores.shape[:-1] + (m,))
+    return idx, mask
+
+
+def select(
+    scores: jax.Array, gcfg: GlassConfig, m: Optional[int] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Dispatch on gcfg.selection. scores (..., m) -> (idx, mask)."""
+    m = m if m is not None else scores.shape[-1]
+    k = gcfg.k_of(m)
+    if gcfg.selection == "neuron":
+        return select_topk(scores, k)
+    if gcfg.selection == "block":
+        return select_blocks(scores, k, gcfg.block_size)
+    if gcfg.selection == "shard_balanced":
+        return select_shard_balanced(scores, k, gcfg.n_shards)
+    raise ValueError(gcfg.selection)
+
+
+def jaccard(mask_a: jax.Array, mask_b: jax.Array, axis: int = -1) -> jax.Array:
+    """Jaccard similarity between binary masks along ``axis``."""
+    a = mask_a > 0.5
+    b = mask_b > 0.5
+    inter = jnp.sum((a & b).astype(jnp.float32), axis=axis)
+    union = jnp.sum((a | b).astype(jnp.float32), axis=axis)
+    return inter / jnp.maximum(union, 1.0)

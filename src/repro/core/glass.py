@@ -1,0 +1,119 @@
+"""GLASS end-to-end pipeline: prior computation, mask building, compaction.
+
+Typical deployment flow (paper Fig. 2):
+
+  1. offline, once per model:
+       prior = compute_global_prior(model, params, rng, nps_cfg, variant)
+  2. per request, at the end of prefill:
+       logits, cache, local = model.prefill(params, inputs, max_len)
+       masks = build_masks(local, prior, gcfg)
+  3. steady-state decode with the compact FFN:
+       compact = compact_params(model, params, masks.idx)
+       logits, cache = model.decode_step(params, tok, cache, n,
+                                         compact_layers=compact)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.api import Model
+from ..models.ffn import compact_ffn_params
+from ..models.moe import compact_moe_params
+from . import importance
+from .fusion import GlassConfig, glass_scores, select
+from .nps import NPSConfig, nps_corpus, teacher_forced_batch
+
+
+@dataclass(frozen=True)
+class MaskSet:
+    idx: jax.Array  # (L, k) int32 (MoE: (L, E, k))
+    mask: jax.Array  # (L, m) f32   (MoE: (L, E, f))
+    scores: jax.Array  # fused consensus scores, same shape as mask
+
+
+def compute_global_prior(
+    model: Model,
+    params,
+    rng: jax.Array,
+    npc: NPSConfig,
+    variant: str = "A",
+    corpus: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Model-intrinsic importance via NPS (or a provided corpus for the
+    Wiki-style ablation).  Returns the per-layer mean importance M^g."""
+    if corpus is None:
+        corpus = nps_corpus(model, params, rng, npc)
+    batches = [
+        teacher_forced_batch(corpus[i : i + npc.batch], npc.bos_id)
+        for i in range(0, corpus.shape[0], npc.batch)
+    ]
+    if variant == "A":
+        stats = importance.global_activation_stats(model, params, batches)
+    elif variant == "I":
+        stats = importance.global_impact_stats(model, params, batches)
+    else:
+        raise ValueError(variant)
+    return importance.finalize(stats)
+
+
+def build_masks(local_stats: Dict, global_prior: jax.Array, gcfg: GlassConfig) -> MaskSet:
+    """Fuse prefill-local and global importance into the decode mask set.
+
+    local_stats: {"sum_abs", "count"} from prefill; global_prior: (L, m).
+    lam = 0 -> GRIFFIN (local-only); lam = 1 -> static global mask."""
+    local = importance.finalize(local_stats)
+    if local.ndim == 1:  # hybrid shared block: single (m,) signal
+        local = local[None]
+        global_prior = global_prior if global_prior.ndim > 1 else global_prior[None]
+    scores = glass_scores(local, global_prior, gcfg.lam)
+    idx, mask = select(scores, gcfg)
+    return MaskSet(idx=idx, mask=mask, scores=scores)
+
+
+def compact_params(model: Model, params, idx: jax.Array):
+    """One-time gather of selected units into compact decode weights.
+
+    Returns the ``compact_layers`` pytree accepted by ``model.decode_step``
+    (stacked over layers, matching the scan layout)."""
+    cfg = model.cfg
+    if cfg.is_encoder_decoder:
+        return jax.vmap(lambda p, i: compact_ffn_params(p, i))(
+            params["dec_layers"]["ffn"], idx
+        )
+    if cfg.family == "moe":
+        return jax.vmap(lambda p, i: compact_moe_params(p, i))(
+            {k: params["layers"]["moe"][k] for k in params["layers"]["moe"]}, idx
+        )
+    if cfg.family == "ssm":
+        cm = params["layers"]["cm"]
+
+        def one(p, i):
+            return {
+                "mu": p["mu"],
+                "wr": p["wr"],
+                "wk": jnp.take(p["wk"], i, axis=1),
+                "wv": jnp.take(p["wv"], i, axis=0),
+            }
+
+        return jax.vmap(one)(cm, idx)
+    if cfg.family == "hybrid":
+        i = idx[0] if idx.ndim > 1 else idx
+        return compact_ffn_params(params["shared_attn"]["ffn"], i)
+    return jax.vmap(lambda p, i: compact_ffn_params(p, i))(params["layers"]["ffn"], idx)
+
+
+def glass_pipeline_masks(
+    model: Model,
+    params,
+    prefill_stats: Dict,
+    global_prior: jax.Array,
+    gcfg: GlassConfig,
+):
+    """Convenience: masks + compact params in one call."""
+    masks = build_masks(prefill_stats, global_prior, gcfg)
+    compact = compact_params(model, params, masks.idx)
+    return masks, compact

@@ -1,0 +1,71 @@
+"""Neuron-importance estimation: local A^l and global A^g / I^g.
+
+All statistics are *running sums* (sum_abs, count) so they can be merged
+across micro-batches, hosts, and checkpoint shards; ``finalize`` turns them
+into the expectation used for ranking.
+
+I^g uses multiplicative gain probes: with h -> h * (1 + p) at p = 0,
+dL/dp_j = h_j * dL/dh_j per token, so a single backward pass yields the
+first-order Taylor impact |h_j delta_j| of Eq. (5-6).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.api import Model
+
+
+def finalize(stats: Dict[str, jax.Array]) -> jax.Array:
+    """(sum_abs, count) -> mean importance. Supports (L,m) and MoE (L,E,f)."""
+    sum_abs, count = stats["sum_abs"], stats["count"]
+    while count.ndim < sum_abs.ndim:
+        count = count[..., None]
+    return sum_abs / jnp.maximum(count, 1.0)
+
+
+def merge(a: Optional[Dict], b: Dict) -> Dict:
+    if a is None:
+        return b
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def local_stats_from_prefill(stats: Dict) -> Dict:
+    """Prefill already returns the right structure; exposed for symmetry."""
+    return stats
+
+
+@partial(jax.jit, static_argnums=0)
+def _activation_stats_batch(model: Model, params, batch) -> Dict:
+    _, stats = model.logits_with_stats(params, batch)
+    return stats
+
+
+def global_activation_stats(model: Model, params, batches: Iterable[Dict]) -> Dict:
+    """A^g sums over a corpus of teacher-forced batches."""
+    acc = None
+    for batch in batches:
+        acc = merge(acc, jax.device_get(_activation_stats_batch(model, params, batch)))
+    return jax.tree.map(jnp.asarray, acc)
+
+
+@partial(jax.jit, static_argnums=0)
+def _impact_stats_batch(model: Model, params, batch) -> Dict:
+    B, S = batch["tokens"].shape
+    probes = model.probe_zeros((B, S))
+    g = jax.grad(lambda pr: model.loss_with_probes(params, pr, batch))(probes)
+    # g: (L, B, S, m) = h * dL/dh per token; loss is mean-CE, rescale to sum
+    n_tok = jnp.asarray(float(B * S), jnp.float32)
+    sums = jnp.sum(jnp.abs(g) * n_tok, axis=(1, 2))  # (L, m)
+    return {"sum_abs": sums, "count": jnp.full((g.shape[0],), float(B * S), jnp.float32)}
+
+
+def global_impact_stats(model: Model, params, batches: Iterable[Dict]) -> Dict:
+    """I^g sums (Taylor impact) over teacher-forced batches."""
+    acc = None
+    for batch in batches:
+        acc = merge(acc, jax.device_get(_impact_stats_batch(model, params, batch)))
+    return jax.tree.map(jnp.asarray, acc)

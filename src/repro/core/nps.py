@@ -1,0 +1,87 @@
+"""Null-Prompt Stimulation (NPS) — paper Sec. 3.3 / App. B.3.
+
+Generates sequences from the model itself conditioned only on a BOS token:
+
+  * first ``hot_steps`` tokens: temperature ``hot_temp`` (1.5) + bigram
+    repetition penalty, to maximize initial diversity;
+  * afterwards: temperature 1.0, penalty off;
+  * top-k = 20 filtering throughout.
+
+The generated corpus is then replayed (teacher forcing, each self-generated
+next token as the pseudo-label) to accumulate the global priors A^g / I^g.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.api import Model
+from ..serve.sampling import bigram_init, bigram_penalize, bigram_update, sample
+
+
+@dataclass(frozen=True)
+class NPSConfig:
+    n_seqs: int = 64  # paper: 1000 (scaled for CPU runs)
+    seq_len: int = 128  # paper: 1024
+    batch: int = 32  # generation micro-batch
+    bos_id: int = 1
+    top_k: int = 20
+    hot_steps: int = 10
+    hot_temp: float = 1.5
+    temp: float = 1.0
+    bigram_penalty: float = 8.0
+
+
+def nps_generate_batch(
+    model: Model, params, rng: jax.Array, npc: NPSConfig, batch: int
+) -> jax.Array:
+    """Generate (batch, seq_len) token ids with the NPS sampling schedule.
+
+    The whole generation is one lax.scan over decode steps (jit-friendly)."""
+    cfg = model.cfg
+    V = cfg.vocab_size
+    cache = model.init_cache(batch, npc.seq_len + 1)
+    prev = jnp.full((batch,), npc.bos_id, jnp.int32)
+    seen = bigram_init(batch, V)
+
+    def step(carry, i):
+        cache, prev, seen, rng = carry
+        rng, krng = jax.random.split(rng)
+        logits, cache = model.decode_step(params, prev[:, None], cache, i.astype(jnp.int32))
+        logits = logits[:, 0].astype(jnp.float32)
+        hot = i < npc.hot_steps
+        logits = bigram_penalize(logits, seen, prev, npc.bigram_penalty, enabled=hot)
+        temp = jnp.where(hot, npc.hot_temp, npc.temp)
+        nxt = sample(krng, logits, temperature=temp, top_k=npc.top_k).astype(jnp.int32)
+        seen = bigram_update(seen, prev, nxt)
+        return (cache, nxt, seen, rng), nxt
+
+    (_, _, _, _), toks = jax.lax.scan(
+        step, (cache, prev, seen, rng), jnp.arange(npc.seq_len)
+    )
+    return toks.T  # (batch, seq_len)
+
+
+def nps_corpus(model: Model, params, rng: jax.Array, npc: NPSConfig) -> jax.Array:
+    """Full NPS corpus (n_seqs, seq_len), generated in micro-batches."""
+    outs = []
+    n_done = 0
+    gen = jax.jit(partial(nps_generate_batch, model, npc=npc, batch=npc.batch))
+    while n_done < npc.n_seqs:
+        rng, sub = jax.random.split(rng)
+        outs.append(gen(params, sub))
+        n_done += npc.batch
+    return jnp.concatenate(outs, axis=0)[: npc.n_seqs]
+
+
+def teacher_forced_batch(tokens: jax.Array, bos_id: int) -> dict:
+    """Replay batch: inputs are [BOS, t_0..t_{n-2}], labels are the sequence
+    itself (each self-generated next token is its own pseudo-label)."""
+    B = tokens.shape[0]
+    bos = jnp.full((B, 1), bos_id, tokens.dtype)
+    inp = jnp.concatenate([bos, tokens[:, :-1]], axis=1)
+    return {"tokens": inp, "labels": tokens}

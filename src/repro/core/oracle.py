@@ -1,0 +1,61 @@
+"""Oracle diagnostics (paper Sec. 4.3 / App. C.1).
+
+The oracle critical set for an input is the top-k units by *post-hoc*
+decoding-time activation magnitude — unavailable to any practical method,
+but the reference against which Local-Only / Global-Only / Global-Local
+selection quality is measured (Jaccard similarity, Tab. 5 / Fig. 1).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.api import Model
+from . import importance
+from .fusion import GlassConfig, jaccard, select_topk
+
+
+def activation_stats_over_region(
+    model: Model, params, tokens: jax.Array, region_mask: jax.Array
+) -> Dict:
+    """A-signal sums restricted to region_mask (B, S) positions."""
+    if model.cfg.is_encoder_decoder:
+        raise NotImplementedError
+    from ..models import transformer
+
+    _, _, stats, _ = transformer.forward(
+        params, tokens, model.cfg, collect_stats=True, stats_mask=region_mask
+    )
+    return stats
+
+
+def oracle_masks(
+    model: Model,
+    params,
+    full_tokens: jax.Array,  # (B, S) prompt + generated continuation
+    prompt_len: int,
+    density: float,
+) -> Tuple[jax.Array, jax.Array]:
+    """Oracle = top-k by decoding-time activation magnitude.
+
+    Stats are accumulated only over positions >= prompt_len (the generated
+    region).  Returns (idx (L,k), mask (L,m))."""
+    B, S = full_tokens.shape
+    region = (jnp.arange(S)[None, :] >= prompt_len).astype(jnp.float32)
+    region = jnp.broadcast_to(region, (B, S))
+    stats = activation_stats_over_region(model, params, full_tokens, region)
+    a_dec = importance.finalize(stats)
+    k = max(1, int(round(density * a_dec.shape[-1])))
+    return select_topk(a_dec, k)
+
+
+def jaccard_vs_oracle(mask: jax.Array, oracle_mask: jax.Array) -> Dict[str, jax.Array]:
+    """Per-layer and aggregate Jaccard of a candidate mask set vs the oracle."""
+    per_layer = jaccard(mask, oracle_mask)
+    return {
+        "per_layer": per_layer,
+        "mean": jnp.mean(per_layer),
+        "std": jnp.std(per_layer),
+    }

@@ -1,0 +1,32 @@
+"""Byte-level tokenizer with reserved specials, mapped into any vocab size.
+
+ids: 0 = PAD, 1 = BOS, 2 = EOS, 3..258 = bytes.  For models whose vocab is
+larger than 259 the rest of the table is simply unused (harmless — the
+embedding rows exist but are never indexed); this keeps one tokenizer
+consistent across every assigned architecture.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+BYTE_OFFSET = 3
+VOCAB_MIN = 259
+
+
+def encode(text: str, add_bos: bool = True, add_eos: bool = False) -> np.ndarray:
+    ids = [b + BYTE_OFFSET for b in text.encode("utf-8")]
+    if add_bos:
+        ids = [BOS_ID] + ids
+    if add_eos:
+        ids = ids + [EOS_ID]
+    return np.asarray(ids, np.int32)
+
+
+def decode(ids) -> str:
+    bs = bytes(int(i) - BYTE_OFFSET for i in ids if int(i) >= BYTE_OFFSET)
+    return bs.decode("utf-8", errors="replace")

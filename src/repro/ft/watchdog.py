@@ -1,0 +1,96 @@
+"""Fault-tolerance plumbing: step-time watchdog, heartbeats, re-mesh planning.
+
+On a real multi-host deployment each host runs a ``Heartbeat`` writer; the
+coordinator (or every peer — it is just file mtimes) runs ``check_peers`` and
+feeds dead/straggling hosts into ``plan_elastic_mesh`` to pick the largest
+valid mesh for restart from the latest checkpoint (checkpoints are
+mesh-independent — see checkpoint.ckpt).  The watchdog's EWMA + k*sigma rule
+flags stragglers *before* they fail, the usual early signal on 1000+ nodes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class StepWatchdog:
+    """EWMA step-time tracker: flags steps slower than mean + k*std."""
+
+    alpha: float = 0.1
+    k_sigma: float = 3.0
+    warmup_steps: int = 5
+    mean: float = 0.0
+    var: float = 0.0
+    n: int = 0
+    slow_steps: List[Tuple[int, float]] = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.n += 1
+        if self.n <= self.warmup_steps:
+            self.mean = dt if self.n == 1 else (1 - self.alpha) * self.mean + self.alpha * dt
+            self.var = max(self.var, (dt - self.mean) ** 2)
+            return False
+        slow = dt > self.mean + self.k_sigma * max(self.var, 1e-12) ** 0.5
+        if slow:
+            self.slow_steps.append((step, dt))
+        else:  # only track healthy steps in the baseline
+            delta = dt - self.mean
+            self.mean += self.alpha * delta
+            self.var = (1 - self.alpha) * (self.var + self.alpha * delta * delta)
+        return slow
+
+
+class Heartbeat:
+    """Per-host liveness file: mtime is the signal, content is diagnostics."""
+
+    def __init__(self, directory: str | Path, host_id: int):
+        self.path = Path(directory) / f"heartbeat_{host_id:05d}.json"
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self.host_id = host_id
+
+    def beat(self, step: int, extra: Optional[Dict] = None):
+        payload = {"host": self.host_id, "step": step, "t": time.time(), **(extra or {})}
+        tmp = self.path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(payload))
+        os.replace(tmp, self.path)
+
+
+def check_peers(directory: str | Path, timeout_s: float, now: Optional[float] = None) -> Dict[str, List[int]]:
+    """Classify hosts by heartbeat freshness. Returns {alive, dead}."""
+    now = now if now is not None else time.time()
+    alive, dead = [], []
+    for p in sorted(Path(directory).glob("heartbeat_*.json")):
+        host = int(p.stem.split("_")[1])
+        try:
+            t = json.loads(p.read_text())["t"]
+        except Exception:  # torn write — treat as stale, next beat fixes it
+            t = p.stat().st_mtime
+        (alive if now - t <= timeout_s else dead).append(host)
+    return {"alive": alive, "dead": dead}
+
+
+def plan_elastic_mesh(
+    n_healthy_hosts: int,
+    chips_per_host: int,
+    model_parallel: int,
+) -> Optional[Tuple[int, int]]:
+    """Largest (data, model) mesh on the healthy set.
+
+    Keeps the model axis fixed (TP degree is architectural) and shrinks the
+    data axis to the largest full multiple — the restart then restores the
+    latest checkpoint with the new shardings (elastic data parallelism)."""
+    chips = n_healthy_hosts * chips_per_host
+    if chips < model_parallel:
+        return None
+    data = chips // model_parallel
+    # largest power-of-two data axis keeps batch-divisibility guarantees
+    p = 1
+    while p * 2 <= data:
+        p *= 2
+    return (p, model_parallel)

@@ -1,0 +1,143 @@
+"""Flash attention (Pallas, TPU target): causal / sliding-window / softcap.
+
+Grid (batch*heads, nq, nk) — TPU grids run sequentially minor-to-major, so
+the kv axis is innermost and the online-softmax state (m, l, acc) lives in
+VMEM scratch carried across kv steps:
+
+    m_new = max(m, rowmax(s));  alpha = exp(m - m_new)
+    l     = l * alpha + rowsum(exp(s - m_new))
+    acc   = acc * alpha + exp(s - m_new) @ v
+
+Blocks fully outside the causal/window band are skipped with pl.when (they
+cost a grid step but no MXU work).  The final kv step normalizes by l.
+
+VMEM per step: q/k/v tiles (3 * bq|bk x hd) + acc (bq, hd) f32 + scores
+(bq, bk) f32 — a few MB for the default 512x512 tiling.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -2.0e38
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref,  # (1, bq, hd), (1, bk, hd), (1, bk, hd), (1, bq, hd)
+    m_ref, l_ref, acc_ref,  # scratch: (bq, 1), (bq, 1), (bq, hd)
+    *,
+    bq: int,
+    bk: int,
+    nk: int,
+    seq_q: int,
+    seq_kv: int,
+    causal: bool,
+    window: Optional[int],
+    softcap: Optional[float],
+    scale: float,
+):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block-level skip: causal => kv block start must not exceed q block end
+    q_end = (iq + 1) * bq - 1 + (seq_kv - seq_q)  # align ends
+    k_start = ik * bk
+    in_band = True
+    if causal:
+        in_band = k_start <= q_end
+    if window is not None:
+        # kv block end must be within window of the q block start
+        q_start = iq * bq + (seq_kv - seq_q)
+        in_band = jnp.logical_and(in_band, (q_start - ((ik + 1) * bk - 1)) < window)
+
+    @pl.when(in_band)
+    def _compute():
+        q = q_ref[0]
+        k = k_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + (seq_kv - seq_q)
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, H, Sq, hd)
+    k: jax.Array,  # (B, H, Skv, hd)
+    v: jax.Array,  # (B, H, Skv, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    Skv = k.shape[2]
+    scale = scale if scale is not None else hd**-0.5
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    nq, nk = Sq // bq, Skv // bk
+    qf = q.reshape(B * H, Sq, hd)
+    kf = k.reshape(B * H, Skv, hd)
+    vf = v.reshape(B * H, Skv, hd)
+
+    kernel = functools.partial(
+        _kernel,
+        bq=bq, bk=bk, nk=nk, seq_q=Sq, seq_kv=Skv,
+        causal=causal, window=window, softcap=softcap, scale=scale,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, hd)

@@ -1,0 +1,84 @@
+"""GLASS local-importance accumulator (Pallas, TPU target).
+
+Computes sum_t |h_t| / ||h_t||_2 over a (T, m) hidden-activation stream in
+two tiled passes:
+
+  pass 1 — row norms: grid (nT, nM), accumulate sum of squares per row tile
+           into a (T, 1) scratch-backed output (m is the inner, sequential
+           axis so the accumulator is revisited safely);
+  pass 2 — normalized-abs accumulation: grid (nM, nT) with T inner, adding
+           |h| / norm row-blocks into the (1, m) output.
+
+This is the kernel the prefill pass fuses its A^l statistics through: each
+tile is touched exactly once per pass, so the extra HBM traffic over the
+plain FFN forward is ~2x reads of h (vs 3x for the unfused jnp version which
+materializes |h| and h^2 separately).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-6
+
+
+def _norms_kernel(h_ref, o_ref, *, nm: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    h = h_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.sum(h * h, axis=1, keepdims=True)
+
+
+def _accum_kernel(h_ref, n_ref, o_ref, *, nt: int):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    h = h_ref[...].astype(jnp.float32)
+    nrm = jnp.sqrt(n_ref[...]) + EPS  # (bt, 1)
+    o_ref[...] += jnp.sum(jnp.abs(h) / nrm, axis=0, keepdims=True)
+
+
+def local_stats(
+    h: jax.Array,  # (T, m)
+    *,
+    block_t: int = 256,
+    block_m: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (m,) f32: sum over rows of |h|/||h||_2."""
+    T, m = h.shape
+    bt, bm = min(block_t, T), min(block_m, m)
+    assert T % bt == 0 and m % bm == 0, (T, bt, m, bm)
+    nt, nm = T // bt, m // bm
+
+    sumsq = pl.pallas_call(
+        functools.partial(_norms_kernel, nm=nm),
+        grid=(nt, nm),
+        in_specs=[pl.BlockSpec((bt, bm), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, 1), jnp.float32),
+        interpret=interpret,
+    )(h)
+
+    out = pl.pallas_call(
+        functools.partial(_accum_kernel, nt=nt),
+        grid=(nm, nt),
+        in_specs=[
+            pl.BlockSpec((bt, bm), lambda j, i: (i, j)),
+            pl.BlockSpec((bt, 1), lambda j, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, m), jnp.float32),
+        interpret=interpret,
+    )(h, sumsq)
+    return out[0]

@@ -1,0 +1,51 @@
+"""Jit'd public entry points for the Pallas kernels.
+
+``interpret`` defaults to True on CPU hosts (kernels execute via the Pallas
+interpreter for correctness work) and should be False on real TPU backends —
+callers flip it via the module-level ``INTERPRET`` or per-call.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention as _flash
+from .glass_ffn import glass_ffn_block_sparse as _glass_ffn
+from .local_stats import local_stats as _local_stats
+
+INTERPRET = jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("act", "block_size", "interpret"))
+def glass_ffn(
+    x, w_up, w_down, block_idx, w_gate=None, *, act="silu", block_size=128, interpret=None
+):
+    """Block-sparse GLASS FFN decode step: only active weight blocks are read."""
+    it = INTERPRET if interpret is None else interpret
+    return _glass_ffn(
+        x, w_up, w_down, block_idx, w_gate, act=act, block_size=block_size, interpret=it
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q, k, v, *, causal=True, window=None, softcap=None, scale=None,
+    block_q=512, block_k=512, interpret=None,
+):
+    it = INTERPRET if interpret is None else interpret
+    return _flash(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=it,
+    )
+
+
+@partial(jax.jit, static_argnames=("block_t", "block_m", "interpret"))
+def local_stats(h, *, block_t=256, block_m=512, interpret=None):
+    it = INTERPRET if interpret is None else interpret
+    return _local_stats(h, block_t=block_t, block_m=block_m, interpret=it)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": functools.partial(jax.nn.gelu, approximate=True),
+    "relu": jax.nn.relu,
+    "relu2": lambda t: jnp.square(jax.nn.relu(t)),
+}
+
+
+def glass_ffn_ref(
+    x: jax.Array,  # (B, d)
+    w_up: jax.Array,  # (d, m)
+    w_down: jax.Array,  # (m, d)
+    block_idx: jax.Array,  # (nb_active,)
+    w_gate: jax.Array | None = None,
+    *,
+    act: str = "silu",
+    block_size: int = 128,
+) -> jax.Array:
+    """Masked full-width FFN == block-sparse kernel output (f32)."""
+    m = w_up.shape[1]
+    nb = m // block_size
+    bmask = jnp.zeros((nb,), jnp.float32).at[block_idx].set(1.0)
+    mask = jnp.repeat(bmask, block_size)
+    x32 = x.astype(jnp.float32)
+    up = x32 @ w_up.astype(jnp.float32)
+    if w_gate is not None:
+        h = _ACTS[act](x32 @ w_gate.astype(jnp.float32)) * up
+    else:
+        h = _ACTS[act](up)
+    h = h * mask
+    return h @ w_down.astype(jnp.float32)
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, H, Sq, hd)
+    k: jax.Array,  # (B, H, Skv, hd)
+    v: jax.Array,  # (B, H, Skv, hd)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    hd = q.shape[-1]
+    scale = scale if scale is not None else hd**-0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    Sq, Skv = q.shape[2], k.shape[2]
+    qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)  # align ends (prefill: Sq==Skv)
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def local_stats_ref(h: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """sum over rows of |h_t| / ||h_t||_2 — (T, m) -> (m,) f32."""
+    h32 = h.astype(jnp.float32)
+    nrm = jnp.sqrt(jnp.sum(jnp.square(h32), axis=-1, keepdims=True))
+    return jnp.sum(jnp.abs(h32) / (nrm + eps), axis=0)

@@ -1,0 +1,314 @@
+"""Trip-count-aware cost analysis over compiled HLO text.
+
+Why this exists: XLA's HloCostAnalysis (``compiled.cost_analysis()``) visits
+every computation once — a ``lax.scan`` over 46 layers contributes its body
+cost a single time, so FLOPs / bytes / collective counts are undercounted by
+the trip count.  All our models scan over layers (HLO-size discipline for the
+80-layer dry-runs), so we parse the optimized HLO ourselves:
+
+  * computations are split and instructions indexed (name -> shape);
+  * ``while`` ops are mapped to their body/condition; the trip count is
+    recovered from the largest s32 constant in the condition computation
+    (scan counters run 0..N with an LT compare — validated against known
+    layer counts in tests);
+  * dot FLOPs: 2 * prod(result dims) * prod(contracting dims);
+  * HBM traffic: per top-level instruction, result + operand bytes.
+    Post-fusion HLO boundaries are materialization points, so this is a
+    structural estimate of HBM round-trips (fusion internals stay on-chip);
+    plumbing ops (tuple/gte/parameter/bitcast/constant) are free;
+  * collectives: result bytes per op kind (all-reduce counted 2x for the
+    ring's reduce+broadcast phases), scaled by enclosing trip counts.
+
+Everything is recursive: cost(entry) = sum(inst) + trip * cost(while body)
++ cost(fusion bodies through ``calls=``).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DT_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id", "iota",
+    "copy-start", "copy-done",
+}
+COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "ragged-all-to-all",
+}
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        if m.group("dt") not in _DT_BYTES:
+            continue
+        dims = m.group("dims")
+        n = int(np.prod([int(d) for d in dims.split(",") if d])) if dims else 1
+        total += n * _DT_BYTES[m.group("dt")]
+    return total
+
+
+def shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    dims = m.group("dims")
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+@dataclass
+class Instruction:
+    name: str
+    shape: str
+    op: str
+    args: List[str]
+    attrs: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction] = field(default_factory=list)
+
+
+@dataclass
+class CostReport:
+    dot_flops: float = 0.0
+    traffic_bytes: float = 0.0  # instruction-level upper bound (see module doc)
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "CostReport", mult: float = 1.0):
+        self.dot_flops += other.dot_flops * mult
+        self.traffic_bytes += other.traffic_bytes * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) + v * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = self.collective_counts.get(k, 0.0) + v * mult
+
+    @property
+    def collective_traffic(self) -> float:
+        # ring all-reduce moves ~2x payload (reduce-scatter + all-gather phase)
+        return sum(
+            (2.0 if k.startswith("all-reduce") else 1.0) * v
+            for k, v in self.collective_bytes.items()
+        )
+
+
+def _balanced(s: str, start: int) -> int:
+    """Index just past the paren group opening at s[start] ('(')."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+def _parse_instruction(raw: str) -> Optional[Instruction]:
+    s = raw.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%") or " = " not in s:
+        return None
+    name, rhs = s.split(" = ", 1)
+    name = name.strip().lstrip("%")
+    rhs = rhs.strip()
+    # shape: either a tuple "(...)" or "dtype[dims]{layout}"
+    if rhs.startswith("("):
+        end = _balanced(rhs, 0)
+        shape = rhs[:end]
+        rest = rhs[end:].strip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        shape = rhs[:sp]
+        rest = rhs[sp + 1 :].strip()
+    # op name up to '('
+    par = rest.find("(")
+    if par < 0:
+        return None
+    op = rest[:par].strip()
+    if not re.fullmatch(r"[\w\-]+", op):
+        return None
+    end = _balanced(rest, par)
+    args = [a.strip() for a in _split_args(rest[par + 1 : end - 1])]
+    attrs = rest[end:]
+    return Instruction(name=name, shape=shape, op=op, args=args, attrs=attrs, line=raw)
+
+
+def parse_module(txt: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in txt.splitlines():
+        line = raw.rstrip()
+        # computation header: "%name (params) -> type {" possibly "ENTRY %..."
+        if line.endswith("{") and ") -> " in line and " = " not in line:
+            hdr = line.lstrip()
+            if hdr.startswith("ENTRY "):
+                hdr = hdr[6:]
+            name = hdr.split(" ", 1)[0].lstrip("%")
+            cur = Computation(name)
+            comps[name] = cur
+            continue
+        if cur is None:
+            continue
+        inst = _parse_instruction(raw)
+        if inst:
+            cur.instructions.append(inst)
+    return comps
+
+
+def _split_args(s: str) -> List[str]:
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+class HloCostModel:
+    def __init__(self, txt: str):
+        self.comps = parse_module(txt)
+        self.shapes: Dict[str, str] = {}
+        for comp in self.comps.values():
+            for inst in comp.instructions:
+                self.shapes[inst.name] = inst.shape
+        self._memo: Dict[str, CostReport] = {}
+        self._entry = self._find_entry(txt)
+
+    def _find_entry(self, txt: str) -> str:
+        m = re.search(r"^ENTRY\s+%?(?P<name>[\w\.\-]+)", txt, re.M)
+        if m:
+            return m.group("name")
+        return next(iter(self.comps))
+
+    # -- trip count ------------------------------------------------------
+
+    def trip_count(self, cond_name: str) -> int:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        best = 1
+        names = {cond_name}
+        # include fusions called from the condition
+        for inst in comp.instructions:
+            cm = re.search(r"calls=%?([\w\.\-]+)", inst.attrs)
+            if cm:
+                names.add(cm.group(1))
+        for nm in names:
+            c = self.comps.get(nm)
+            if not c:
+                continue
+            for inst in c.instructions:
+                if inst.op == "constant" and inst.shape.startswith("s32[]"):
+                    vm = re.search(r"constant\((-?\d+)\)", inst.line)
+                    if vm:
+                        best = max(best, int(vm.group(1)))
+        return best
+
+    # -- per-instruction costs -------------------------------------------
+
+    def _operand_shape(self, ref: str) -> str:
+        name = ref.strip().lstrip("%").split(" ")[0]
+        return self.shapes.get(name, "")
+
+    def _dot_flops(self, inst: Instruction) -> float:
+        out_dims = shape_dims(inst.shape)
+        lhs_shape = shape_dims(self._operand_shape(inst.args[0]))
+        cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst.attrs)
+        contract = 1
+        if cm and lhs_shape:
+            for idx in cm.group(1).split(","):
+                if idx:
+                    contract *= lhs_shape[int(idx)]
+        return 2.0 * float(np.prod(out_dims) if out_dims else 0) * contract
+
+    def _conv_flops(self, inst: Instruction) -> float:
+        out_dims = shape_dims(inst.shape)
+        rhs = shape_dims(self._operand_shape(inst.args[1])) if len(inst.args) > 1 else []
+        kernel = float(np.prod(rhs[:-1])) if rhs else 1.0
+        return 2.0 * float(np.prod(out_dims)) * kernel
+
+    # -- recursion ---------------------------------------------------------
+
+    def computation_cost(self, name: str) -> CostReport:
+        if name in self._memo:
+            return self._memo[name]
+        rep = CostReport()
+        self._memo[name] = rep  # break cycles defensively
+        comp = self.comps.get(name)
+        if comp is None:
+            return rep
+        for inst in comp.instructions:
+            if inst.op == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", inst.attrs)
+                cm = re.search(r"condition=%?([\w\.\-]+)", inst.attrs)
+                trips = self.trip_count(cm.group(1)) if cm else 1
+                if bm:
+                    rep.add(self.computation_cost(bm.group(1)), mult=trips)
+                continue
+            if inst.op in ("conditional", "call", "fusion", "reduce", "sort", "map",
+                           "reduce-window", "scatter", "select-and-scatter", "custom-call"):
+                for cm2 in re.finditer(
+                    r"(?:calls|to_apply|branch_computations)=\{?%?([\w\.\-,% ]+)\}?", inst.attrs
+                ):
+                    for sub in cm2.group(1).replace("%", "").split(","):
+                        sub = sub.strip()
+                        if sub in self.comps:
+                            rep.add(self.computation_cost(sub))
+            if inst.op in FREE_OPS:
+                continue
+            if inst.op == "dot":
+                rep.dot_flops += self._dot_flops(inst)
+            elif inst.op in ("convolution",):
+                rep.dot_flops += self._conv_flops(inst)
+            if inst.op in COLLECTIVES:
+                key = inst.op.replace("-start", "")
+                b = shape_bytes(inst.shape)
+                rep.collective_bytes[key] = rep.collective_bytes.get(key, 0.0) + b
+                rep.collective_counts[key] = rep.collective_counts.get(key, 0.0) + 1
+                rep.traffic_bytes += b
+                continue
+            if inst.op.endswith("-done"):
+                continue
+            # HBM traffic: result + operands (args that are tensor refs)
+            b = shape_bytes(inst.shape)
+            for a in inst.args:
+                b += shape_bytes(self._operand_shape(a))
+            rep.traffic_bytes += b
+        return rep
+
+    def entry_cost(self) -> CostReport:
+        return self.computation_cost(self._entry)
+
+
+def analyze_hlo(txt: str) -> CostReport:
+    return HloCostModel(txt).entry_cost()

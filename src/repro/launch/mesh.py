@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run entrypoint must set XLA_FLAGS
+before anything initializes the backend.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over host/CPU devices for tests (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count set by the caller)."""
+    auto = (jax.sharding.AxisType.Auto,) * 2
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=auto)
+
+
+def dp_axes(mesh) -> tuple:
+    """Mesh axes carrying the batch dimension."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh, name: str) -> int:
+    if name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]

@@ -1,0 +1,114 @@
+"""Assigned input shapes and ShapeDtypeStruct builders for every cell.
+
+Shapes (per the assignment):
+  train_4k     seq 4096,    global_batch 256   -> train_step
+  prefill_32k  seq 32768,   global_batch 32    -> glass_prefill (mask build)
+  decode_32k   seq 32768,   global_batch 128   -> serve_step (1 new token)
+  long_500k    seq 524288,  global_batch 1     -> serve_step, sub-quadratic
+                                                  archs only (ssm / hybrid)
+
+Whisper (enc-dec): seq_len is the *audio-frame* count seen by the encoder
+(frontend stubbed to precomputed frame embeddings); decoder text length is
+seq_len // 4.  Decode shapes drive the decoder with a seq-length self-cache.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.api import Model, build_model
+from ..models.common import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq: int
+    batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+SUBQUADRATIC = ("ssm", "hybrid")
+
+
+def applicable_shapes(cfg: ModelConfig) -> List[str]:
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.family in SUBQUADRATIC:
+        out.append("long_500k")  # full-attention archs skip (DESIGN.md §6)
+    return out
+
+
+def compact_config(cfg: ModelConfig, density: float) -> ModelConfig:
+    """Config whose FFN width equals the GLASS-compact width."""
+    return cfg.replace(d_ff=int(round(cfg.d_ff * density)))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, SDS]:
+    """Training / prefill input batch."""
+    B, S = shape.batch, shape.seq
+    if cfg.is_encoder_decoder:
+        text = max(S // 4, 8)
+        out = {
+            "frames": SDS((B, S, cfg.d_model), cfg.compute_dtype),
+            "tokens": SDS((B, text), jnp.int32),
+        }
+        if shape.kind == "train":
+            out["labels"] = SDS((B, text), jnp.int32)
+        return out
+    out = {"tokens": SDS((B, S), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = SDS((B, S), jnp.int32)
+    return out
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    model = build_model(cfg)
+    if cfg.is_encoder_decoder:
+        L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        dt = cfg.compute_dtype
+        t_enc = max(max_len // 4, 8)
+        return {
+            "k": SDS((L, batch, max_len, K, hd), dt),
+            "v": SDS((L, batch, max_len, K, hd), dt),
+            "xk": SDS((L, batch, t_enc, K, hd), dt),
+            "xv": SDS((L, batch, t_enc, K, hd), dt),
+        }
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec, density: Optional[float]) -> dict:
+    """Inputs for serve_step: (params[, compact], cache, token, cache_len)."""
+    dcfg = compact_config(cfg, density) if density else cfg
+    return {
+        "params": param_specs(dcfg),
+        "cache": cache_specs(dcfg, shape.batch, shape.seq),
+        "token": SDS((shape.batch, 1), jnp.int32),
+        "cache_len": SDS((), jnp.int32),
+    }
+
+
+def prior_spec(cfg: ModelConfig) -> SDS:
+    """Global-prior input to glass_prefill."""
+    if cfg.family == "moe":
+        slots = cfg.n_experts * cfg.expert_replication
+        return SDS((cfg.n_layers, slots, cfg.d_ff), jnp.float32)
+    if cfg.family == "hybrid":
+        return SDS((1, cfg.d_ff), jnp.float32)
+    return SDS((cfg.n_layers, cfg.d_ff), jnp.float32)

@@ -1,0 +1,171 @@
+"""Step builders: the jittable train / glass-prefill / decode programs.
+
+These are the functions the dry-run lowers and the real launchers run.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from ..core.fusion import GlassConfig, glass_scores, select_shard_balanced
+from ..core.importance import finalize
+from ..models.api import Model
+from ..sharding.dist_glass import (
+    compact_ffn_sharded,
+    compact_moe_sharded,
+    compact_rwkv_cm_sharded,
+    to_local_indices,
+)
+from ..train.optim import OptConfig, adamw_update, init_opt_state
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    model: Model,
+    oc: OptConfig,
+    grad_accum: int = 1,
+    grad_shardings=None,  # pytree of NamedSharding like params: pins the f32
+):  # grad-accum carry (otherwise SPMD may replicate it — 4 bytes/param!)
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    grad_accum > 1 scans over microbatches accumulating f32 grads — the
+    standard memory lever for the big-model cells."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def pin(tree):
+        if grad_shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            grads = pin(grads)
+        else:
+            def resh(x):
+                B = x.shape[0]
+                return x.reshape(grad_accum, B // grad_accum, *x.shape[1:])
+
+            mbs = jax.tree.map(resh, batch)
+            g0 = pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+            def body(acc, mb):
+                (l, met), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                acc = pin(jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g))
+                return acc, (l, met)
+
+            gsum, (ls, mets) = jax.lax.scan(body, g0, mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = jnp.mean(ls)
+            metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0), mets)
+        new_params, new_opt, om = adamw_update(params, grads, opt_state, oc)
+        return new_params, new_opt, {**metrics, **om, "loss": loss}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving: GLASS prefill (stats -> fusion -> shard-balanced compaction)
+# ---------------------------------------------------------------------------
+
+
+def _ffn_width(cfg) -> int:
+    return cfg.d_ff
+
+
+def make_glass_prefill(
+    model: Model,
+    gcfg: GlassConfig,
+    max_len: int,
+    mesh: Optional[Mesh] = None,
+    model_shards: int = 1,
+):
+    """Returns prefill(params, inputs, global_prior) ->
+    (last_logits, cache, compact_ffn).
+
+    With a mesh, selection is shard-balanced over the model axis and the
+    weight gather runs shard-locally under shard_map (no collectives); on a
+    single device it falls back to the exact global top-k."""
+    cfg = model.cfg
+    m_width = _ffn_width(cfg)
+
+    def prefill(params, inputs, global_prior):
+        logits, cache, stats = model.prefill(params, inputs, max_len)
+        local = finalize(stats)
+        if local.ndim == 1:
+            local = local[None]
+        prior = global_prior if global_prior.ndim == local.ndim else global_prior[None]
+        scores = glass_scores(local, prior, gcfg.lam)
+        k = gcfg.k_of(scores.shape[-1])
+        if model_shards > 1:
+            idx, _ = select_shard_balanced(scores, k, model_shards)
+            idx_local = to_local_indices(idx, scores.shape[-1], model_shards)
+        else:
+            from ..core.fusion import select_topk
+
+            idx, _ = select_topk(scores, k)
+            idx_local = idx[..., None, :]  # (L, 1, k)
+
+        if mesh is not None and model_shards > 1:
+            if cfg.family == "moe":
+                compact = compact_moe_sharded(mesh, params["layers"]["moe"], idx_local)
+            elif cfg.family == "ssm":
+                compact = compact_rwkv_cm_sharded(mesh, params["layers"]["cm"], idx_local)
+            elif cfg.family == "hybrid":
+                ffn = {k2: v[None] for k2, v in params["shared_attn"]["ffn"].items()}
+                compact = compact_ffn_sharded(mesh, ffn, idx_local)
+                compact = {k2: v[0] for k2, v in compact.items()}
+            elif cfg.is_encoder_decoder:
+                compact = compact_ffn_sharded(mesh, params["dec_layers"]["ffn"], idx_local)
+            else:
+                compact = compact_ffn_sharded(mesh, params["layers"]["ffn"], idx_local)
+        else:
+            from ..core.glass import compact_params as _cp
+
+            compact = _cp(model, params, idx)
+        last = logits[:, -1]
+        return last, cache, compact
+
+    return prefill
+
+
+# ---------------------------------------------------------------------------
+# Serving: decode step (greedy for the dry-run; engine uses sampling)
+# ---------------------------------------------------------------------------
+
+
+def make_decode_step(model: Model, greedy: bool = True):
+    """decode(params, cache, token, cache_len) -> (next_token, cache).
+
+    For GLASS steady-state decode, pass params whose FFN weights are the
+    compact ones (built by glass-prefill) — the step code is identical."""
+
+    def decode(params, cache, token, cache_len):
+        logits, cache = model.decode_step(params, token, cache, cache_len)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+
+    return decode
+
+
+def make_decode_step_masked(model: Model):
+    """Masked decode (no compaction): GLASS as a multiplier mask — used by the
+    block-sparse kernel path where weights stay resident and masked."""
+
+    def decode(params, cache, token, cache_len, ffn_masks):
+        logits, cache = model.decode_step(params, token, cache, cache_len, ffn_masks=ffn_masks)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+
+    return decode

@@ -1,0 +1,142 @@
+"""Uniform model API over all families.
+
+A ``Model`` bundles pure functions keyed off the config; params stay explicit
+pytrees so pjit/shard_map wrap these functions directly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, transformer
+from .attention import init_cache as _init_kv_cache
+from .common import ModelConfig
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- init ---------------------------------------------------------------
+    def init(self, rng: jax.Array):
+        if self.cfg.is_encoder_decoder:
+            return encdec.init_encdec(rng, self.cfg)
+        return transformer.init_lm(rng, self.cfg)
+
+    # -- training -----------------------------------------------------------
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        if self.cfg.is_encoder_decoder:
+            return encdec.encdec_loss(params, batch, self.cfg)
+        return transformer.lm_loss(params, batch, self.cfg)
+
+    # -- full-sequence logits (evaluation, KLD/PPL metrics) ------------------
+    def logits(self, params, batch, **kw) -> jax.Array:
+        if self.cfg.is_encoder_decoder:
+            enc_out = encdec.encode(params, batch["frames"], self.cfg)
+            out, _, _ = encdec.decode_full(params, batch["tokens"], enc_out, self.cfg, **kw)
+            return out
+        out, _, _, _ = transformer.forward(params, batch["tokens"], self.cfg, **kw)
+        return out
+
+    # -- forward with GLASS instrumentation ----------------------------------
+    def logits_with_stats(self, params, batch):
+        """Returns (logits, stats) — stats are per-layer A-signal sums."""
+        if self.cfg.is_encoder_decoder:
+            enc_out = encdec.encode(params, batch["frames"], self.cfg)
+            out, stats, _ = encdec.decode_full(
+                params, batch["tokens"], enc_out, self.cfg, collect_stats=True
+            )
+            return out, stats
+        out, _, stats, _ = transformer.forward(
+            params, batch["tokens"], self.cfg, collect_stats=True
+        )
+        return out, stats
+
+    def loss_with_probes(self, params, probes, batch):
+        """CE loss with additive zero probes on every FFN hidden vector.
+        grad w.r.t. ``probes`` gives the per-token dL/dh for I-GLASS."""
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            enc_out = encdec.encode(params, batch["frames"], cfg)
+            logits, _, _ = encdec.decode_full(params, batch["tokens"], enc_out, cfg, probes=probes)
+        else:
+            logits, _, _, _ = transformer.forward(params, batch["tokens"], cfg, probes=probes)
+        loss, _ = transformer.cross_entropy(logits, batch["labels"], batch.get("mask"))
+        return loss
+
+    def probe_zeros(self, batch_shape: Tuple[int, int]) -> jax.Array:
+        """Zero probes (L, B, S, m) matching this config's FFN hidden width."""
+        cfg = self.cfg
+        B, S = batch_shape
+        if cfg.family == "hybrid":
+            raise NotImplementedError("hybrid probes: use shared-block stats instead")
+        return jnp.zeros((cfg.n_layers, B, S, cfg.d_ff), jnp.float32)
+
+    # -- serving ------------------------------------------------------------
+    def prefill(self, params, inputs: Dict[str, jax.Array], max_len: int):
+        """inputs: {"tokens": (B,S)} (+ "frames" for enc-dec).
+        Returns (logits, cache, local_stats)."""
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            return encdec.encdec_prefill(params, inputs["frames"], inputs["tokens"], cfg, max_len)
+        if cfg.family == "ssm":
+            logits, _, stats, cache = transformer.rwkv_forward(
+                params, inputs["tokens"], cfg, collect_stats=True, return_cache=True
+            )
+            return logits, cache, stats
+        if cfg.family == "hybrid":
+            return transformer.hybrid_prefill(params, inputs["tokens"], cfg, max_len)
+        return transformer.dense_prefill(params, inputs["tokens"], cfg, max_len)
+
+    def decode_step(
+        self,
+        params,
+        token: jax.Array,  # (B, 1)
+        cache,
+        cache_len: jax.Array,
+        *,
+        ffn_masks=None,
+        compact_layers=None,
+    ):
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            return encdec.encdec_decode_step(
+                params, token, cache, cache_len, cfg, ffn_masks=ffn_masks, compact_layers=compact_layers
+            )
+        if cfg.family == "ssm":
+            return transformer.rwkv_decode_step(
+                params, token, cache, cache_len, cfg, ffn_masks=ffn_masks, compact_layers=compact_layers
+            )
+        if cfg.family == "hybrid":
+            mask = ffn_masks[0] if (ffn_masks is not None and ffn_masks.ndim > 1) else ffn_masks
+            return transformer.hybrid_decode_step(
+                params, token, cache, cache_len, cfg, shared_mask=mask, shared_compact=compact_layers
+            )
+        return transformer.dense_decode_step(
+            params, token, cache, cache_len, cfg, ffn_masks=ffn_masks, compact_layers=compact_layers
+        )
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        if cfg.is_encoder_decoder:
+            raise NotImplementedError("enc-dec cache comes from prefill")
+        if cfg.family == "ssm":
+            from .rwkv6 import rwkv_heads
+
+            H, P = rwkv_heads(cfg), cfg.rwkv_headdim
+            return {
+                "state": jnp.zeros((cfg.n_layers, batch, H, P, P), jnp.float32),
+                "shift_tm": jnp.zeros((cfg.n_layers, batch, cfg.d_model), dt),
+                "shift_cm": jnp.zeros((cfg.n_layers, batch, cfg.d_model), dt),
+            }
+        if cfg.family == "hybrid":
+            return transformer.init_hybrid_cache(cfg, batch, max_len)
+        return _init_kv_cache(cfg, batch, max_len, cfg.n_layers, dt)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

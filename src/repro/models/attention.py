@@ -1,0 +1,242 @@
+"""Grouped-query attention with RoPE / M-RoPE, score softcap, sliding window,
+and KV-cache decode.
+
+Conventions:
+  x            (B, S, d_model)
+  q            (B, S, K, G, hd)   K = kv heads, G = q_per_kv
+  k, v         (B, S, K, hd)
+  cache        dict(k=(B, S_max, K, hd), v=(B, S_max, K, hd))
+
+The sliding ``window`` is a *traced* int32 scalar so that a single scan body
+serves both local and global layers (gemma2 alternation): global layers pass
+window = S_max (no-op).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.ctx import constrain
+from .common import ModelConfig, dense_init, softcap
+from .rope import apply_rope, mrope_angles, rope_angles
+
+NEG_INF = -2.0e38  # f32-safe large negative
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        "wq": dense_init(ks[0], (d, cfg.attn_dim), dtype),
+        "wk": dense_init(ks[1], (d, cfg.kv_dim), dtype),
+        "wv": dense_init(ks[2], (d, cfg.kv_dim), dtype),
+        "wo": dense_init(ks[3], (cfg.attn_dim, d), dtype, fan_in=cfg.attn_dim),
+    }
+
+
+def _project_qkv(p, x, cfg: ModelConfig):
+    B, S, _ = x.shape
+    K, G, hd = cfg.n_kv_heads, cfg.q_per_kv, cfg.head_dim
+    if cfg.gqa_layout == "repeated":
+        q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    else:
+        q = (x @ p["wq"]).reshape(B, S, K, G, hd)
+    k = (x @ p["wk"]).reshape(B, S, K, hd)
+    v = (x @ p["wv"]).reshape(B, S, K, hd)
+    return q, k, v
+
+
+def _rope_qk(q, k, cfg: ModelConfig, positions):
+    """positions: (B,S) for standard rope, (3,B,S) for m-rope, None to skip."""
+    if cfg.rope_type == "none" or positions is None:
+        return q, k
+    if cfg.rope_type == "mrope":
+        ang = mrope_angles(positions, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        ang = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    if q.ndim == 4:  # repeated layout: (B,S,H,hd)
+        q = apply_rope(q, ang)
+    else:  # grouped layout: fold (K, G) -> heads for rotation, then back.
+        B, S, K, G, hd = q.shape
+        q = apply_rope(q.reshape(B, S, K * G, hd), ang).reshape(B, S, K, G, hd)
+    k = apply_rope(k, ang)
+    return q, k
+
+
+def _attend(q, k, v, cfg: ModelConfig, mask) -> jax.Array:
+    """Scores in f32, optional tanh softcap. Returns (B, Sq, attn_dim).
+
+    grouped layout:  q (B,Sq,K,G,hd), k/v (B,Skv,K,hd)
+    repeated layout: q (B,Sq,H,hd),   k/v broadcast to H heads
+    mask (B,1,1,Sq,Skv) broadcastable (grouped adds a G axis internally).
+    """
+    scale = cfg.head_dim ** -0.5
+    if q.ndim == 4:  # repeated
+        G = cfg.q_per_kv
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        scores = (
+            jnp.einsum("bshd,bthd->bhst", q, k, preferred_element_type=jnp.float32) * scale
+        )
+        if cfg.attn_softcap is not None:
+            scores = cfg.attn_softcap * jnp.tanh(scores / cfg.attn_softcap)
+        scores = jnp.where(mask[:, 0], scores, NEG_INF)  # (B,H,Sq,Skv)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhst,bthd->bshd", probs, v)
+        B, Sq = out.shape[0], out.shape[1]
+        return out.reshape(B, Sq, cfg.attn_dim)
+    scores = jnp.einsum(
+        "bskgd,btkd->bkgst", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if cfg.attn_softcap is not None:
+        scores = cfg.attn_softcap * jnp.tanh(scores / cfg.attn_softcap)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    B, Sq = out.shape[0], out.shape[1]
+    return out.reshape(B, Sq, cfg.attn_dim)
+
+
+def causal_window_mask(
+    q_pos: jax.Array,  # (B, Sq) int32
+    kv_pos: jax.Array,  # (Skv,) int32
+    window,  # traced scalar or python int; None => no window
+    kv_len=None,  # traced scalar: only positions < kv_len are valid (decode)
+    causal: bool = True,
+) -> jax.Array:
+    """Boolean mask (B, 1, 1, Sq, Skv): True = attend."""
+    qp = q_pos[:, None, None, :, None]
+    kp = kv_pos[None, None, None, None, :]
+    mask = jnp.ones(qp.shape[:4] + (kv_pos.shape[0],), dtype=bool)
+    if causal:
+        mask = qp >= kp
+    if window is not None:
+        mask = mask & ((qp - kp) < window)
+    if kv_len is not None:
+        mask = mask & (kp < kv_len)
+    return mask
+
+
+def _attend_chunked(q, k, v, cfg: ModelConfig, qpos, kvpos, window, causal, chunk):
+    """Query-chunked attention: lax.scan over q chunks, exact full-row softmax
+    per chunk.  Peak score memory O(chunk * S_kv) instead of O(S^2)."""
+    B, S = q.shape[0], q.shape[1]
+    nq = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    q_c = jnp.moveaxis(q.reshape((B, nq, chunk) + q.shape[2:]), 1, 0)
+    qpos_c = jnp.moveaxis(qpos.reshape(B, nq, chunk), 1, 0)
+
+    @jax.checkpoint  # recompute per-chunk scores in backward: keeps the
+    def body(_, xs):  # inner scan's residuals O(chunk) instead of O(S^2)
+        qc, qp = xs
+        mask = causal_window_mask(qp, kvpos, window, causal=causal)
+        return 0, _attend(qc, k, v, cfg, mask)
+
+    _, out = jax.lax.scan(body, 0, (q_c, qpos_c))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, cfg.attn_dim)
+
+
+def attention_forward(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions,
+    window=None,
+    causal: bool = True,
+    return_kv: bool = False,
+):
+    """Full-sequence attention (training / prefill)."""
+    q, k, v = _project_qkv(p, x, cfg)
+    q, k = _rope_qk(q, k, cfg, positions)
+    q = constrain(q, "act_heads")
+    k = constrain(k, "act_kv")
+    v = constrain(v, "act_kv")
+    S = x.shape[1]
+    qpos = positions[0] if cfg.rope_type == "mrope" and positions is not None else positions
+    if qpos is None:
+        qpos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (x.shape[0], S))
+    kvpos = jnp.arange(S, dtype=jnp.int32)
+    if S > 2 * cfg.attn_chunk and S % cfg.attn_chunk == 0:
+        out = _attend_chunked(q, k, v, cfg, qpos, kvpos, window, causal, cfg.attn_chunk)
+    else:
+        mask = causal_window_mask(qpos, kvpos, window, causal=causal)
+        out = _attend(q, k, v, cfg, mask)
+    y = constrain(out, "act_attn_out") @ p["wo"]
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def cross_attention_forward(p: dict, x: jax.Array, kv_src: jax.Array, cfg: ModelConfig, kv_mask=None):
+    """Encoder-decoder cross attention; no RoPE, no causality."""
+    q, _, _ = _project_qkv(p, x, cfg)
+    B, T, _ = kv_src.shape
+    k = (kv_src @ p["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    v = (kv_src @ p["wv"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+    if kv_mask is None:
+        mask = jnp.ones((B, 1, 1, x.shape[1], T), dtype=bool)
+    else:
+        mask = kv_mask[:, None, None, None, :]
+    out = _attend(q, k, v, cfg, mask)
+    return out @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int, dtype) -> dict:
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def write_cache_prefill(cache_k, cache_v, k, v):
+    """Write prefill k/v (B,S,K,hd) at offset 0 of per-layer cache (B,Smax,K,hd)."""
+    ck = constrain(jax.lax.dynamic_update_slice_in_dim(cache_k, k, 0, axis=1), "decode_cache")
+    cv = constrain(jax.lax.dynamic_update_slice_in_dim(cache_v, v, 0, axis=1), "decode_cache")
+    return ck, cv
+
+
+def attention_decode(
+    p: dict,
+    x: jax.Array,  # (B, 1, d)
+    cfg: ModelConfig,
+    *,
+    cache_k: jax.Array,  # (B, S_max, K, hd)
+    cache_v: jax.Array,
+    cache_len: jax.Array,  # scalar int32: tokens already in cache
+    window=None,
+):
+    """One decode step: append token's k/v, attend over valid prefix."""
+    B, _, _ = x.shape
+    S_max = cache_k.shape[1]
+    q, k, v = _project_qkv(p, x, cfg)
+    pos = jnp.broadcast_to(cache_len.astype(jnp.int32)[None, None], (B, 1))
+    if cfg.rope_type == "mrope":
+        rp = jnp.broadcast_to(pos[None], (3, B, 1))
+    else:
+        rp = pos
+    q, k = _rope_qk(q, k, cfg, rp)
+    q = constrain(q, "decode_q")
+    if q.ndim == 4:
+        # repeated layout: q is replicated at decode (1 token — negligible),
+        # so regroup to (B,1,K,G,hd) and use the grouped einsum.  A
+        # jnp.repeat of the cache would force the SPMD partitioner to
+        # replicate the sequence-sharded cache (involuntary full remat).
+        B_, S_, H_, hd_ = q.shape
+        q = q.reshape(B_, S_, cfg.n_kv_heads, cfg.q_per_kv, hd_)
+    cache_k = constrain(
+        jax.lax.dynamic_update_slice_in_dim(cache_k, k, cache_len, axis=1), "decode_cache"
+    )
+    cache_v = constrain(
+        jax.lax.dynamic_update_slice_in_dim(cache_v, v, cache_len, axis=1), "decode_cache"
+    )
+    kvpos = jnp.arange(S_max, dtype=jnp.int32)
+    mask = causal_window_mask(pos, kvpos, window, kv_len=cache_len + 1)
+    out = _attend(q, cache_k, cache_v, cfg, mask)
+    y = out @ p["wo"]
+    return y, cache_k, cache_v

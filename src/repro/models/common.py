@@ -1,0 +1,249 @@
+"""Shared model-substrate pieces: config, norms, embeddings, init helpers.
+
+Everything is pure JAX: params are nested dicts of jnp arrays, apply
+functions are module-level and take the config explicitly.  Logical sharding
+axes are attached out-of-band (see repro.sharding.logical) keyed by the param
+tree path, so the model code stays sharding-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "tiny"
+    family: str = "dense"  # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int = 4
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 512
+    vocab_size: int = 512
+
+    # FFN
+    ffn_act: str = "silu"  # silu | gelu | relu | relu2
+    gated_ffn: bool = True
+
+    # attention extras
+    rope_theta: float = 10000.0
+    rope_type: str = "standard"  # standard | mrope | none
+    mrope_sections: Tuple[int, ...] = ()
+    attn_softcap: Optional[float] = None
+    logit_softcap: Optional[float] = None
+    sliding_window: Optional[int] = None
+    attn_pattern: str = "global"  # global | local_global (alternating, local first)
+    sandwich_norms: bool = False  # gemma2 post-norms
+    embed_scale: bool = False  # gemma: embeddings scaled by sqrt(d_model)
+    # GQA execution layout (sharding-driven, numerics-identical):
+    #   grouped  — q as (B,S,K,G,hd); best when kv_heads % model_parallel == 0
+    #   repeated — q as (B,S,H,hd), kv broadcast to q heads; for kv_heads not
+    #              divisible by the model axis but n_heads divisible
+    gqa_layout: str = "grouped"
+
+    # MoE
+    n_experts: int = 0
+    n_experts_per_tok: int = 0
+    moe_strategy: str = "dense"  # dense | dropping
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    moe_chunk: int = 512  # sequence chunk for dropping dispatch
+    # redundant-expert replication (DeepSeek-V3 style): expert weights are
+    # stored as n_experts * expert_replication slots; the router still picks
+    # logical experts, tokens split across replicas by position parity.
+    # Lets an expert count that doesn't divide the data axis (grok: 8 vs 16)
+    # run as clean expert parallelism instead of FSDP weight gathers.
+    expert_replication: int = 1
+
+    # SSM (mamba2) / hybrid
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    mamba_headdim: int = 64
+    mamba_expand: int = 2
+    attn_every: int = 0  # zamba2: shared attention block every N mamba layers
+
+    # rwkv6
+    rwkv_headdim: int = 64
+    rwkv_lora_rank: int = 32
+
+    # enc-dec (whisper)
+    is_encoder_decoder: bool = False
+    n_enc_layers: int = 0
+    max_positions: int = 8192  # learned-position table size for enc-dec
+
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    dtype: str = "bfloat16"
+    remat: str = "full"  # none | dots | full
+    # query-chunked attention kicks in above this seq length: peak score
+    # memory drops from O(S^2) to O(attn_chunk * S) per head (exact, not an
+    # approximation — full-row softmax per chunk)
+    attn_chunk: int = 1024
+
+    # GLASS integration defaults (density applied at serve time)
+    glass_density: float = 0.5
+    glass_block: int = 128  # block size for TPU block-structured selection
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    @property
+    def attn_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def n_params(self) -> int:
+        """Analytic parameter count (used for 6ND model-flops estimates)."""
+        d, f, v, L = self.d_model, self.d_ff, self.vocab_size, self.n_layers
+        attn = d * self.attn_dim + 2 * d * self.kv_dim + self.attn_dim * d
+        ffn_mats = 3 if self.gated_ffn else 2
+        if self.family == "moe":
+            # logical parameter count (replicas are copies, not new params)
+            ffn = self.n_experts * ffn_mats * d * f + d * self.n_experts
+        else:
+            ffn = ffn_mats * d * f
+        if self.family == "ssm":  # rwkv6
+            att_free = rwkv6_param_count(self)
+            return v * d * (1 if self.tie_embeddings else 2) + L * att_free
+        if self.family == "hybrid":
+            return v * d + hybrid_param_count(self)
+        if self.is_encoder_decoder:
+            enc = self.n_enc_layers * (attn + ffn)
+            dec = L * (2 * attn + ffn)  # self + cross attention
+            return v * d * 2 + enc + dec
+        embed = v * d * (1 if self.tie_embeddings else 2)
+        return embed + L * (attn + ffn)
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only routed experts)."""
+        if self.family != "moe":
+            return self.n_params()
+        d, f, L = self.d_model, self.d_ff, self.n_layers
+        attn = d * self.attn_dim + 2 * d * self.kv_dim + self.attn_dim * d
+        ffn_mats = 3 if self.gated_ffn else 2
+        ffn_active = self.n_experts_per_tok * ffn_mats * d * f
+        embed = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return embed + L * (attn + ffn_active)
+
+
+def rwkv6_param_count(cfg: ModelConfig) -> int:
+    d, f = cfg.d_model, cfg.d_ff
+    tm = 4 * d * d + d * d  # r,k,v,g + output
+    lora = 6 * 2 * d * cfg.rwkv_lora_rank
+    cm = 2 * d * f  # channel mix: Wk (d,f), Wv (f,d) ; Wr (d,d)
+    return tm + lora + cm + d * d
+
+
+def hybrid_param_count(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    d_in = cfg.mamba_expand * d
+    mamba = d * (2 * d_in + 2 * cfg.ssm_state) + d_in * d  # rough
+    shared_attn = 4 * d * d + 3 * d * cfg.d_ff
+    return cfg.n_layers * mamba + shared_attn
+
+
+# ---------------------------------------------------------------------------
+# Common layers
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float, plus_one: bool = False) -> jax.Array:
+    """RMSNorm in f32, cast back. ``plus_one``: gemma-style (1 + w) scale."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    scale = 1.0 + w if plus_one else w
+    return (x * scale).astype(dt)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def activation(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: jax.Array, shape: Sequence[int], dtype, fan_in: Optional[int] = None) -> jax.Array:
+    """Truncated-normal init scaled by 1/sqrt(fan_in) (fan_in = shape[-2] default)."""
+    if fan_in is None:
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: Sequence[int], dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def key_tree(key: jax.Array, n: int) -> list:
+    return list(jax.random.split(key, n))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def remat_policy(cfg: ModelConfig):
+    if cfg.remat == "none":
+        return None
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    if cfg.remat == "dots_no_batch":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    return jax.checkpoint(fn, policy=remat_policy(cfg))

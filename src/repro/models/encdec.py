@@ -1,0 +1,236 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, T_frames, d) directly to the encoder.
+Encoder: sinusoidal positions, bidirectional attention, GELU (non-gated) FFN.
+Decoder: learned positions, causal self-attention + cross-attention, GELU FFN.
+
+GLASS targets the decoder FFNs (the decode-time hot path); the non-gated FFN
+is the g_j = 1 branch of the paper's Eq. (3).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import (
+    attention_decode,
+    attention_forward,
+    cross_attention_forward,
+    init_attention,
+    write_cache_prefill,
+)
+from ..sharding.ctx import constrain
+from .common import ModelConfig, dense_init, embed_init, layer_norm, maybe_remat
+from .ffn import ffn_forward, ffn_forward_with_stats, init_ffn
+from .transformer import cross_entropy
+
+
+def _ln_init(d, dtype):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _init_enc_layer(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "attn": init_attention(ks[0], cfg, dtype),
+        "ffn": init_ffn(ks[1], cfg, dtype),
+        "ln1": _ln_init(cfg.d_model, dtype),
+        "ln2": _ln_init(cfg.d_model, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "self_attn": init_attention(ks[0], cfg, dtype),
+        "cross_attn": init_attention(ks[1], cfg, dtype),
+        "ffn": init_ffn(ks[2], cfg, dtype),
+        "ln1": _ln_init(cfg.d_model, dtype),
+        "ln2": _ln_init(cfg.d_model, dtype),
+        "ln3": _ln_init(cfg.d_model, dtype),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig) -> Dict:
+    dtype = cfg.compute_dtype
+    ks = jax.random.split(key, 6)
+    ekeys = jnp.stack(jax.random.split(ks[0], cfg.n_enc_layers))
+    dkeys = jnp.stack(jax.random.split(ks[1], cfg.n_layers))
+    return {
+        "embed": embed_init(ks[2], (cfg.vocab_size, cfg.d_model), dtype),
+        "pos_dec": embed_init(ks[3], (cfg.max_positions, cfg.d_model), dtype),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(ekeys),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(dkeys),
+        "enc_ln": _ln_init(cfg.d_model, dtype),
+        "dec_ln": _ln_init(cfg.d_model, dtype),
+    }
+
+
+def sinusoids(length: int, channels: int) -> np.ndarray:
+    log_timescale = np.log(10000.0) / (channels // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(channels // 2))
+    t = np.arange(length)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(t), np.cos(t)], axis=1).astype(np.float32)
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames (B, T, d) — post-frontend embeddings (stub)."""
+    B, T, d = frames.shape
+    x = frames + jnp.asarray(sinusoids(T, d), frames.dtype)[None]
+
+    def body(x, lp):
+        h = layer_norm(x, lp["ln1"]["w"], lp["ln1"]["b"], cfg.norm_eps)
+        x = x + attention_forward(lp["attn"], h, cfg, positions=None, causal=False)
+        h2 = layer_norm(x, lp["ln2"]["w"], lp["ln2"]["b"], cfg.norm_eps)
+        x = constrain(x + ffn_forward(lp["ffn"], h2, cfg), "act_btd")
+        return x, None
+
+    x, _ = jax.lax.scan(maybe_remat(body, cfg), x, params["enc_layers"])
+    return layer_norm(x, params["enc_ln"]["w"], params["enc_ln"]["b"], cfg.norm_eps)
+
+
+def decode_full(
+    params,
+    tokens: jax.Array,  # (B, S)
+    enc_out: jax.Array,  # (B, T, d)
+    cfg: ModelConfig,
+    *,
+    ffn_masks=None,  # (L_dec, m)
+    probes=None,
+    collect_stats: bool = False,
+    stats_mask=None,
+    return_cache: bool = False,
+):
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0) + params["pos_dec"][None, :S]
+    L = cfg.n_layers
+    have_mask = ffn_masks is not None
+    have_probe = probes is not None
+    mask_xs = ffn_masks if have_mask else jnp.zeros((L, 0))
+    probe_xs = probes if have_probe else jnp.zeros((L, 0))
+
+    def body(x, xs):
+        lp, mask_l, probe_l = xs
+        h = layer_norm(x, lp["ln1"]["w"], lp["ln1"]["b"], cfg.norm_eps)
+        sa = attention_forward(lp["self_attn"], h, cfg, positions=None, return_kv=return_cache)
+        kv = None
+        if return_cache:
+            sa, kv = sa
+        x = x + sa
+        h2 = layer_norm(x, lp["ln2"]["w"], lp["ln2"]["b"], cfg.norm_eps)
+        x = x + cross_attention_forward(lp["cross_attn"], h2, enc_out, cfg)
+        h3 = layer_norm(x, lp["ln3"]["w"], lp["ln3"]["b"], cfg.norm_eps)
+        stats = None
+        if collect_stats:
+            y, stats = ffn_forward_with_stats(lp["ffn"], h3, cfg, token_mask=stats_mask)
+        else:
+            y = ffn_forward(
+                lp["ffn"],
+                h3,
+                cfg,
+                mask=mask_l if have_mask else None,
+                probe=probe_l if have_probe else None,
+            )
+        x = constrain(x + y, "act_btd")
+        return x, (stats, kv)
+
+    x, (stats, kvs) = jax.lax.scan(
+        maybe_remat(body, cfg), x, (params["dec_layers"], mask_xs, probe_xs)
+    )
+    x = layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"], cfg.norm_eps)
+    logits = constrain(x @ params["embed"].T, "logits")
+    return logits, stats, kvs
+
+
+def encdec_loss(params, batch, cfg: ModelConfig):
+    enc_out = encode(params, batch["frames"], cfg)
+    logits, _, _ = decode_full(params, batch["tokens"], enc_out, cfg)
+    loss, n = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss, {"ce": loss, "aux": jnp.float32(0.0), "tokens": n}
+
+
+def cross_kv(params, enc_out: jax.Array, cfg: ModelConfig):
+    """Precompute per-layer cross-attention K/V: (L, B, T, Kh, hd)."""
+    B, T, _ = enc_out.shape
+
+    def one(lp):
+        k = (enc_out @ lp["cross_attn"]["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        v = (enc_out @ lp["cross_attn"]["wv"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        return k, v
+
+    return jax.vmap(one)(params["dec_layers"])
+
+
+def encdec_prefill(params, frames, tokens, cfg: ModelConfig, max_len: int):
+    """Encode + decoder prefill. Returns (logits, cache, stats)."""
+    enc_out = encode(params, frames, cfg)
+    logits, stats, kvs = decode_full(params, tokens, enc_out, cfg, collect_stats=True, return_cache=True)
+    B, S = tokens.shape
+    dt = cfg.compute_dtype
+    shape = (cfg.n_layers, B, max_len, cfg.n_kv_heads, cfg.head_dim)
+    ck, cv = jnp.zeros(shape, dt), jnp.zeros(shape, dt)
+    k, v = kvs
+    ck, cv = jax.vmap(write_cache_prefill)(ck, cv, k, v)
+    xk, xv = cross_kv(params, enc_out, cfg)
+    return logits, {"k": ck, "v": cv, "xk": xk, "xv": xv}, stats
+
+
+def encdec_decode_step(
+    params,
+    token,  # (B, 1)
+    cache,
+    cache_len,
+    cfg: ModelConfig,
+    *,
+    ffn_masks=None,
+    compact_layers=None,
+):
+    B = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0) + jax.lax.dynamic_slice_in_dim(
+        params["pos_dec"], cache_len, 1, axis=0
+    )[None]
+    L = cfg.n_layers
+    have_mask = ffn_masks is not None
+    have_comp = compact_layers is not None
+    mask_xs = ffn_masks if have_mask else jnp.zeros((L, 0))
+    comp_xs = compact_layers if have_comp else jnp.zeros((L, 0))
+
+    def body(x, xs):
+        lp, ck, cv, xk, xv, mask_l, comp_l = xs
+        h = layer_norm(x, lp["ln1"]["w"], lp["ln1"]["b"], cfg.norm_eps)
+        a, ck, cv = attention_decode(
+            lp["self_attn"], h, cfg, cache_k=ck, cache_v=cv, cache_len=cache_len
+        )
+        x = x + a
+        h2 = layer_norm(x, lp["ln2"]["w"], lp["ln2"]["b"], cfg.norm_eps)
+        # cross attention against precomputed enc K/V
+        from .attention import _attend, _project_qkv  # reuse internals
+
+        q, _, _ = _project_qkv(lp["cross_attn"], h2, cfg)
+        mask = jnp.ones((B, 1, 1, 1, xk.shape[1]), bool)
+        ca = _attend(q, xk, xv, cfg, mask) @ lp["cross_attn"]["wo"]
+        x = x + ca
+        h3 = layer_norm(x, lp["ln3"]["w"], lp["ln3"]["b"], cfg.norm_eps)
+        fp = comp_l if have_comp else lp["ffn"]
+        x = x + ffn_forward(fp, h3, cfg, mask=mask_l if have_mask else None)
+        return x, (ck, cv)
+
+    def body_wrap(x, xs):
+        lp, ck, cv, xk, xv, mask_l, comp_l = xs
+        return body(
+            x,
+            (lp, ck, cv, xk, xv, mask_l if have_mask else None, comp_l if have_comp else None),
+        )
+
+    x, (ck, cv) = jax.lax.scan(
+        body_wrap,
+        x,
+        (params["dec_layers"], cache["k"], cache["v"], cache["xk"], cache["xv"], mask_xs, comp_xs),
+    )
+    x = layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"], cfg.norm_eps)
+    logits = x @ params["embed"].T
+    return logits, dict(cache, k=ck, v=cv)

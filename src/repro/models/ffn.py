@@ -1,0 +1,110 @@
+"""Gated FFN block with GLASS instrumentation hooks.
+
+Naming follows the paper (Eq. 1-3) mapped to llama convention:
+
+    h = phi(x @ w_gate) * (x @ w_up)        (gated)
+    h = phi(x @ w_up)                        (non-gated, e.g. whisper GELU)
+    y = h @ w_down
+
+GLASS ranks the m hidden units h_j.  Hooks provided here:
+  * ``mask``  — (m,) multiplier applied to h (neuron-level masking);
+  * ``probe`` — *multiplicative gain probe*: h -> h * (1 + probe) with
+    probe = 0, so grad(loss, probe) = h * dL/dh per token — exactly the
+    I-GLASS first-order Taylor impact, in one backward pass;
+  * ``stats`` — running sum of |h|/||h||_2 over tokens (the A^l / A^g signal).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.ctx import constrain
+from .common import ModelConfig, activation, dense_init
+
+STATS_EPS = 1e-6
+
+
+def init_ffn(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None) -> dict:
+    f = d_ff if d_ff is not None else cfg.d_ff
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], (d, f), dtype),
+        "w_down": dense_init(ks[1], (f, d), dtype, fan_in=f),
+    }
+    if cfg.gated_ffn:
+        p["w_gate"] = dense_init(ks[2], (d, f), dtype)
+    return p
+
+
+def ffn_hidden(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Hidden unit vector h (..., m)."""
+    act = activation(cfg.ffn_act)
+    if "w_gate" in p:
+        return act(x @ p["w_gate"]) * (x @ p["w_up"])
+    return act(x @ p["w_up"])
+
+
+def ffn_forward(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    mask: Optional[jax.Array] = None,
+    probe: Optional[jax.Array] = None,
+) -> jax.Array:
+    h = constrain(ffn_hidden(p, x, cfg), "act_btf")
+    if probe is not None:
+        h = h * (1.0 + probe.astype(h.dtype))
+    if mask is not None:
+        h = h * mask.astype(h.dtype)
+    return h @ p["w_down"]
+
+
+def token_normalized_abs(h: jax.Array) -> jax.Array:
+    """|h|/(||h||_2 + eps) per token, f32. h (..., m) -> same shape f32."""
+    h32 = h.astype(jnp.float32)
+    nrm = jnp.sqrt(jnp.sum(jnp.square(h32), axis=-1, keepdims=True))
+    return jnp.abs(h32) / (nrm + STATS_EPS)
+
+
+def ffn_forward_with_stats(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    token_mask: Optional[jax.Array] = None,  # (..., ) 1.0 valid / 0.0 pad
+) -> Tuple[jax.Array, dict]:
+    """Forward pass that also emits GLASS local-importance sums.
+
+    stats = {"sum_abs": (m,) f32 sum over tokens of |h|/||h||_2,
+             "count":   ()   f32 number of tokens}
+    """
+    h = constrain(ffn_hidden(p, x, cfg), "act_btf")
+    a = token_normalized_abs(h)
+    if token_mask is not None:
+        a = a * token_mask.astype(jnp.float32)[..., None]
+        count = jnp.sum(token_mask.astype(jnp.float32))
+    else:
+        count = jnp.asarray(float(int(jnp.size(h) // h.shape[-1])), jnp.float32)
+    sum_abs = jnp.sum(a.reshape(-1, a.shape[-1]), axis=0)
+    y = h @ p["w_down"]
+    return y, {"sum_abs": sum_abs, "count": count}
+
+
+def compact_ffn_params(p: dict, idx: jax.Array) -> dict:
+    """Gather the k selected hidden units into compact weights.
+
+    idx (k,) int32 — columns of w_up/w_gate and rows of w_down.  This is the
+    one-time gather after mask building; decode then runs dense matmuls of
+    width k (the paper's "compact FFN resident in fast memory").
+    """
+    out = {
+        "w_up": jnp.take(p["w_up"], idx, axis=1),
+        "w_down": jnp.take(p["w_down"], idx, axis=0),
+    }
+    if "w_gate" in p:
+        out["w_gate"] = jnp.take(p["w_gate"], idx, axis=1)
+    return out

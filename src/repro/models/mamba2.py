@@ -1,0 +1,214 @@
+"""Mamba2 (SSD) mixer — chunked state-space duality algorithm.
+
+Implements the scalar-decay-per-head SSD form of Mamba2 (Dao & Gu 2024):
+
+    h_t = exp(dt_t * a) h_{t-1} + dt_t * B_t (x) x_t        (per head)
+    y_t = C_t . h_t + D * x_t
+
+Training/prefill uses the chunkwise-parallel algorithm (quadratic within a
+chunk, linear across chunks via a lax.scan state carry); decode is the O(1)
+recurrence.  n_groups = 1 (B/C shared across heads), matching Zamba2.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.ctx import constrain
+from .common import ModelConfig, dense_init, rms_norm
+
+CHUNK = 256
+
+
+def mamba_dims(cfg: ModelConfig):
+    d_in = cfg.mamba_expand * cfg.d_model
+    n_heads = d_in // cfg.mamba_headdim
+    conv_dim = d_in + 2 * cfg.ssm_state
+    return d_in, n_heads, conv_dim
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype) -> dict:
+    """Projections are stored per-component (z / x / B / C / dt and separate
+    depthwise convs for x, B, C) rather than as one fused ``in_proj`` so every
+    tensor-parallel shard boundary is component-aligned — a fused projection
+    would force resharding at each slice (see DESIGN.md sharding notes)."""
+    d = cfg.d_model
+    d_in, H, _ = mamba_dims(cfg)
+    N, K = cfg.ssm_state, cfg.ssm_conv
+    ks = jax.random.split(key, 10)
+    return {
+        "w_z": dense_init(ks[0], (d, d_in), dtype),
+        "w_x": dense_init(ks[1], (d, d_in), dtype),
+        "w_B": dense_init(ks[2], (d, N), dtype),
+        "w_C": dense_init(ks[3], (d, N), dtype),
+        "w_dt": dense_init(ks[4], (d, H), dtype),
+        "conv_x_w": dense_init(ks[5], (d_in, K), dtype, fan_in=K),
+        "conv_x_b": jnp.zeros((d_in,), dtype),
+        "conv_B_w": dense_init(ks[6], (N, K), dtype, fan_in=K),
+        "conv_B_b": jnp.zeros((N,), dtype),
+        "conv_C_w": dense_init(ks[7], (N, K), dtype, fan_in=K),
+        "conv_C_b": jnp.zeros((N,), dtype),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[8], (H,), jnp.float32, minval=1.0, maxval=16.0)
+        ),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.exp(jax.random.uniform(ks[9], (H,), jnp.float32, minval=1e-3, maxval=0.1)) - 1.0
+        ),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(jax.random.fold_in(key, 11), (d_in, d), dtype, fan_in=d_in),
+    }
+
+
+def _causal_conv(xc, conv_w, conv_b, prev: Optional[jax.Array] = None):
+    """Depthwise causal conv over time. xc (B,S,C), conv_w (C,K).
+
+    prev (B, K-1, C): carried context (decode / chunked prefill).  Returns
+    (y, new_prev).  Implemented as K shifted adds (no gather): cheap on TPU
+    and sharding-transparent over the channel dim."""
+    B, S, C = xc.shape
+    K = conv_w.shape[1]
+    if prev is None:
+        prev = jnp.zeros((B, K - 1, C), xc.dtype)
+    xp = jnp.concatenate([prev, xc], axis=1)  # (B, S+K-1, C)
+    y = jnp.zeros((B, S, C), xc.dtype)
+    for t in range(K):
+        y = y + jax.lax.dynamic_slice_in_dim(xp, t, S, axis=1) * conv_w[:, t]
+    y = y + conv_b
+    new_prev = xp[:, S:, :] if K > 1 else prev
+    return jax.nn.silu(y), new_prev
+
+
+def _project_conv(p, x, cfg: ModelConfig, conv_prev=None):
+    """Per-component projections + depthwise causal convs.
+
+    Returns (z, xs, Bm, Cm, dt, conv_state) with conv_state a dict of
+    per-component carries {"x": (B,K-1,d_in), "B": (B,K-1,N), "C": ...} —
+    kept split so the x carry shards over the model axis while B/C stay
+    replicated (they are shared across heads)."""
+    z = x @ p["w_z"]
+    xs = x @ p["w_x"]
+    Bm = x @ p["w_B"]
+    Cm = x @ p["w_C"]
+    dt = x @ p["w_dt"]
+    cp = conv_prev or {}
+    xs, nx = _causal_conv(xs, p["conv_x_w"], p["conv_x_b"], cp.get("x"))
+    Bm, nB = _causal_conv(Bm, p["conv_B_w"], p["conv_B_b"], cp.get("B"))
+    Cm, nC = _causal_conv(Cm, p["conv_C_w"], p["conv_C_b"], cp.get("C"))
+    return z, xs, Bm, Cm, dt, {"x": nx, "B": nB, "C": nC}
+
+
+def ssd_chunked(xh, dt, a, Bm, Cm, init_state=None, chunk: int = CHUNK):
+    """Chunkwise SSD.
+
+    xh  (B,S,H,P)   head inputs
+    dt  (B,S,H)     positive step sizes
+    a   (H,)        negative per-head decay rates
+    Bm  (B,S,N)     input matrix (shared across heads, n_groups=1)
+    Cm  (B,S,N)     output matrix
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    n = S // Q
+    f32 = jnp.float32
+
+    dA = dt.astype(f32) * a.astype(f32)  # (B,S,H) log-decay per step, <= 0
+    dA = dA.reshape(B, n, Q, H)
+    xw = (xh.astype(f32) * dt.astype(f32)[..., None]).reshape(B, n, Q, H, P)
+    Bc = Bm.astype(f32).reshape(B, n, Q, N)
+    Cc = Cm.astype(f32).reshape(B, n, Q, N)
+
+    cum = jnp.cumsum(dA, axis=2)  # inclusive cumsum within chunk (B,n,Q,H)
+    total = cum[:, :, -1, :]  # (B,n,H)
+
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j else 0  (decays <= 1)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,n,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bniN,bnjN->bnij", Cc, Bc)  # (B,n,Q,Q)
+    y_intra = jnp.einsum("bnij,bnijh,bnjhp->bnihp", scores, L, xw)
+
+    # chunk-local states: S_chunk = sum_j exp(total - cum_j) * B_j (x) xw_j
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)  # (B,n,Q,H)
+    s_chunk = jnp.einsum("bnjN,bnjh,bnjhp->bnhNp", Bc, decay_to_end, xw)
+
+    # inter-chunk recurrence
+    if init_state is None:
+        init_state = jnp.zeros((B, H, N, P), f32)
+
+    def step(state, inp):
+        s_c, tot, c_c, b_full = inp  # per-chunk tensors, leading dim B
+        y_in = jnp.einsum("bqN,bhNp,bqh->bqhp", c_c, state, jnp.exp(b_full))
+        new_state = state * jnp.exp(tot)[:, :, None, None] + s_c
+        return new_state, y_in
+
+    # exp factor for inter contribution at position i: exp(cum_i) (decay from
+    # chunk start to i applied to the incoming state)
+    scan_in = (
+        s_chunk.transpose(1, 0, 2, 3, 4),  # (n,B,H,N,P)
+        total.transpose(1, 0, 2),  # (n,B,H)
+        Cc.transpose(1, 0, 2, 3),  # (n,B,Q,N)
+        cum.transpose(1, 0, 2, 3),  # (n,B,Q,H)
+    )
+    final_state, y_inter = jax.lax.scan(step, init_state, scan_in)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)  # (B,n,Q,H,P)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y, final_state
+
+
+def mamba2_forward(
+    p: dict,
+    x: jax.Array,  # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    init_state=None,
+    conv_prev=None,
+    chunk: int = CHUNK,
+):
+    """Full-sequence mixer. Returns (y, (ssm_state, conv_state))."""
+    B, S, d = x.shape
+    d_in, H, _ = mamba_dims(cfg)
+    P, N = cfg.mamba_headdim, cfg.ssm_state
+    z, xs, Bm, Cm, dt, conv_state = _project_conv(p, x, cfg, conv_prev)
+    xs = constrain(xs.reshape(B, S, H, P), "act_heads")
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    y, state = ssd_chunked(xs, dt, a, Bm, Cm, init_state=init_state, chunk=min(chunk, S))
+    state = constrain(state, "act_state")
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], (state, conv_state)
+
+
+def mamba2_decode(
+    p: dict,
+    x: jax.Array,  # (B, 1, d)
+    cfg: ModelConfig,
+    *,
+    ssm_state: jax.Array,  # (B, H, N, P) f32
+    conv_state: jax.Array,  # (B, K-1, conv_dim)
+):
+    """O(1) single-token recurrence."""
+    B = x.shape[0]
+    d_in, H, _ = mamba_dims(cfg)
+    P, N = cfg.mamba_headdim, cfg.ssm_state
+    z, xs, Bm, Cm, dt, conv_state = _project_conv(p, x, cfg, conv_state)
+    xs = xs[:, 0].reshape(B, H, P)
+    Bm, Cm = Bm[:, 0], Cm[:, 0]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a)  # (B,H)
+    upd = jnp.einsum("bN,bhp,bh->bhNp", Bm.astype(jnp.float32), xs.astype(jnp.float32), dt)
+    ssm_state = ssm_state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bN,bhNp->bhp", Cm.astype(jnp.float32), ssm_state)
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], (ssm_state, conv_state)

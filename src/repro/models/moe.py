@@ -1,0 +1,213 @@
+"""Mixture-of-Experts FFN with two selectable execution strategies.
+
+* ``dense``    — every expert computed for every token, combined with routing
+                 weights.  Exact, simple; used as the reference and for tiny
+                 CPU tests.  Wastes FLOPs proportional to E/k (this shows up
+                 in the roofline MODEL_FLOPS/HLO_FLOPs column by design).
+* ``dropping`` — GShard-style capacity-based dispatch via one-hot einsums,
+                 scanned over sequence chunks so dispatch tensors stay small.
+                 With the expert dim sharded over the ``data`` mesh axis the
+                 dispatch einsum lowers to an all-to-all (classic DP+EP).
+
+GLASS applies *per expert*: each expert's d_ff units are ranked with local
+stats accumulated only over the tokens routed to that expert.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.ctx import constrain
+from .common import ModelConfig, activation, dense_init
+from .ffn import STATS_EPS, token_normalized_abs
+
+
+def n_slots(cfg: ModelConfig) -> int:
+    return cfg.n_experts * cfg.expert_replication
+
+
+def init_moe(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None) -> dict:
+    f = d_ff if d_ff is not None else cfg.d_ff
+    d, E = cfg.d_model, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),  # router kept f32
+        "w_up": dense_init(ks[1], (E, d, f), dtype, fan_in=d),
+        "w_down": dense_init(ks[2], (E, f, d), dtype, fan_in=f),
+    }
+    if cfg.gated_ffn:
+        p["w_gate"] = dense_init(ks[3], (E, d, f), dtype, fan_in=d)
+    if cfg.expert_replication > 1:
+        rep = cfg.expert_replication
+        for k2 in ("w_up", "w_down", "w_gate"):
+            if k2 in p:  # slot s serves logical expert s // rep
+                p[k2] = jnp.repeat(p[k2], rep, axis=0)
+    return p
+
+
+def _slot_idx(idx: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Map logical expert ids (..., k) to replica slots by token parity."""
+    rep = cfg.expert_replication
+    if rep == 1:
+        return idx
+    # position parity along the token axis (axis -2 of (..., tokens, k))
+    t = jax.lax.broadcasted_iota(jnp.int32, idx.shape, idx.ndim - 2)
+    return idx * rep + (t % rep)
+
+
+def router_topk(p, x, cfg: ModelConfig):
+    """Returns (weights (..., k), idx (..., k), aux_loss scalar, probs (..., E))."""
+    logits = (x.astype(jnp.float32) @ p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, cfg.n_experts_per_tok)
+    weights = weights / (jnp.sum(weights, axis=-1, keepdims=True) + STATS_EPS)
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    E = cfg.n_experts
+    f_e = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=-2), axis=tuple(range(idx.ndim - 1))
+    )
+    p_e = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    aux = E * jnp.sum(f_e * p_e)
+    return weights, idx, aux, probs
+
+
+def _expert_hidden(p, xe, cfg: ModelConfig):
+    """xe (E, ..., d) -> h (E, ..., f), batched over the expert dim."""
+    act = activation(cfg.ffn_act)
+    up = jnp.einsum("e...d,edf->e...f", xe, p["w_up"])
+    if "w_gate" in p:
+        return act(jnp.einsum("e...d,edf->e...f", xe, p["w_gate"])) * up
+    return act(up)
+
+
+def moe_dense(
+    p: dict,
+    x: jax.Array,  # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    mask: Optional[jax.Array] = None,  # (E, f)
+    collect_stats: bool = False,
+    stats_mask: Optional[jax.Array] = None,  # (B, S)
+):
+    """All-experts einsum. Returns (y, aux, stats|None)."""
+    weights, idx, aux, _ = router_topk(p, x, cfg)
+    idx = _slot_idx(idx, cfg)
+    E = n_slots(cfg)
+    # combine weights per expert slot: (B,S,E)
+    comb = jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32) * weights[..., None], axis=-2)
+    xe = jnp.broadcast_to(x[None], (E,) + x.shape)
+    h = _expert_hidden(p, xe, cfg)  # (E,B,S,f)
+    stats = None
+    if collect_stats:
+        a = token_normalized_abs(h)  # (E,B,S,f)
+        routed = (comb > 0).astype(jnp.float32)  # (B,S,E)
+        if stats_mask is not None:
+            routed = routed * stats_mask.astype(jnp.float32)[..., None]
+        routed_e = jnp.moveaxis(routed, -1, 0)[..., None]  # (E,B,S,1)
+        stats = {
+            "sum_abs": jnp.sum((a * routed_e).reshape(E, -1, h.shape[-1]), axis=1),
+            "count": jnp.sum(routed_e.reshape(E, -1), axis=1),
+        }
+    if mask is not None:
+        h = h * mask[:, None, None, :].astype(h.dtype)
+    ye = jnp.einsum("ebsf,efd->ebsd", h, p["w_down"])
+    y = jnp.einsum("ebsd,bse->bsd", ye, comb.astype(ye.dtype))
+    return y, aux, stats
+
+
+def moe_dropping(
+    p: dict,
+    x: jax.Array,  # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    mask: Optional[jax.Array] = None,  # (E, f)
+    collect_stats: bool = False,
+    stats_mask: Optional[jax.Array] = None,
+):
+    assert stats_mask is None, "stats_mask only supported by the dense strategy"
+    """Capacity-based dispatch, scanned over sequence chunks.
+
+    Per chunk of c tokens (per batch group): capacity
+    C = ceil(c * k * capacity_factor / E); tokens beyond capacity are dropped
+    (their FFN contribution is zero — residual passes through), as in GShard.
+    """
+    B, S, d = x.shape
+    E, k = n_slots(cfg), cfg.n_experts_per_tok
+    c = min(cfg.moe_chunk, S)
+    n_chunks = math.ceil(S / c)
+    pad = n_chunks * c - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    C = max(1, math.ceil(c * k * cfg.capacity_factor / E))
+
+    xc = x.reshape(B, n_chunks, c, d).transpose(1, 0, 2, 3)  # (n, B, c, d)
+
+    def chunk_fn(carry, xch):  # xch (B, c, d)
+        weights, idx, aux, _ = router_topk(p, xch, cfg)  # (B,c,k)
+        idx = _slot_idx(idx, cfg)
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (B,c,k,E)
+        # position of each (token, slot) within its expert queue, chunk-local
+        flat = onehot.reshape(B, c * k, E)
+        pos = jnp.cumsum(flat, axis=1) - flat  # exclusive cumsum
+        pos = pos.reshape(B, c, k, E)
+        keep = (pos < C).astype(jnp.float32) * onehot
+        # dispatch (B,c,E,C): scatter slot weights into capacity buckets
+        pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32)  # (B,c,k,E,C)
+        disp = jnp.sum(keep[..., None] * pos_oh, axis=2)  # (B,c,E,C)
+        combw = jnp.sum(
+            (keep * weights[..., None])[..., None] * pos_oh, axis=2
+        )  # (B,c,E,C)
+        xe = constrain(jnp.einsum("bcEC,bcd->EbCd", disp.astype(xch.dtype), xch), "moe_expert")
+        h = constrain(_expert_hidden(p, xe, cfg), "moe_hidden")  # (E,B,C,f)
+        st = None
+        if collect_stats:
+            a = token_normalized_abs(h)
+            occupied = jnp.sum(disp, axis=(1,)).transpose(1, 0, 2)  # (E,B,C)
+            st = {
+                "sum_abs": jnp.sum(a * occupied[..., None], axis=(1, 2)),
+                "count": jnp.sum(occupied, axis=(1, 2)),
+            }
+        if mask is not None:
+            h = h * mask[:, None, None, :].astype(h.dtype)
+        ye = jnp.einsum("EbCf,Efd->EbCd", h, p["w_down"])
+        y = jnp.einsum("EbCd,bcEC->bcd", ye, combw.astype(ye.dtype))
+        return carry, (y, aux, st)
+
+    _, (ys, auxs, stats) = jax.lax.scan(chunk_fn, 0.0, xc)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, n_chunks * c, d)[:, :S]
+    aux = jnp.mean(auxs)
+    if collect_stats:
+        stats = {k_: jnp.sum(v, axis=0) for k_, v in stats.items()}
+    else:
+        stats = None
+    return y, aux, stats
+
+
+def moe_forward(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    mask: Optional[jax.Array] = None,
+    collect_stats: bool = False,
+    stats_mask: Optional[jax.Array] = None,
+):
+    if cfg.moe_strategy == "dense":
+        return moe_dense(p, x, cfg, mask=mask, collect_stats=collect_stats, stats_mask=stats_mask)
+    return moe_dropping(p, x, cfg, mask=mask, collect_stats=collect_stats, stats_mask=stats_mask)
+
+
+def compact_moe_params(p: dict, idx: jax.Array) -> dict:
+    """Per-expert compact gather. idx (E, k_keep) int32."""
+    take = jax.vmap(lambda w, i: jnp.take(w, i, axis=1))
+    out = {
+        "router": p["router"],
+        "w_up": take(p["w_up"], idx),
+        "w_down": jax.vmap(lambda w, i: jnp.take(w, i, axis=0))(p["w_down"], idx),
+    }
+    if "w_gate" in p:
+        out["w_gate"] = take(p["w_gate"], idx)
+    return out

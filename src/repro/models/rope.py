@@ -1,0 +1,71 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL style M-RoPE.
+
+M-RoPE splits the head_dim rotary frequencies into (temporal, height, width)
+sections, each driven by its own position id stream.  For text tokens all
+three ids coincide, making M-RoPE degenerate to standard RoPE — the property
+tests rely on this.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,) float32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> jax.Array:
+    """positions (..., S) int -> angles (..., S, head_dim//2) f32."""
+    inv = rope_freqs(head_dim, theta)
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """Rotate x (..., S, H, D) by angles (..., S, D//2).
+
+    Uses the "split halves" convention (llama): pairs are (x[..., :D/2],
+    x[..., D/2:]).
+    """
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def mrope_angles(
+    positions: jax.Array,  # (3, ..., S) int — (t, h, w) id streams
+    head_dim: int,
+    theta: float,
+    sections: Tuple[int, ...],  # in *half-dim* units, sum == head_dim // 2
+) -> jax.Array:
+    """Angles (..., S, head_dim//2): frequency bands are distributed
+    round-robin style by section, matching Qwen2-VL (interleaved sections over
+    the frequency axis, simplified to contiguous chunks of the inv-freq
+    vector)."""
+    assert positions.shape[0] == 3, "m-rope needs (t,h,w) position streams"
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    inv = rope_freqs(head_dim, theta)
+    chunks = []
+    start = 0
+    for idx, sec in enumerate(sections):
+        pos = positions[idx].astype(jnp.float32)  # (..., S)
+        chunks.append(pos[..., None] * inv[start : start + sec])
+        start += sec
+    return jnp.concatenate(chunks, axis=-1)
+
+
+def positions_default(batch: int, seq: int, offset: jax.Array | int = 0) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    return jnp.broadcast_to(pos, (batch, seq))
+
+
+def mrope_positions_text(batch: int, seq: int, offset: jax.Array | int = 0) -> jax.Array:
+    """Text-only M-RoPE ids: all three streams equal."""
+    pos = positions_default(batch, seq, offset)
+    return jnp.broadcast_to(pos[None], (3, batch, seq))

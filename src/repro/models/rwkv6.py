@@ -1,0 +1,248 @@
+"""RWKV6 ("Finch") — attention-free time-mix with data-dependent decay, plus
+the squared-ReLU channel-mix FFN (the GLASS target in this family).
+
+Per head (dim P), per channel-of-key decay w_t in (0,1):
+
+    S_t = Diag(w_t) S_{t-1} + k_t v_t^T            S in R^{P x P}
+    y_t = (S_{t-1} + Diag(u) k_t v_t^T)^T r_t
+
+Training/prefill uses a chunkwise-parallel form in log-decay space (all
+exponents <= 0, numerically safe); decode is the O(1) recurrence.
+
+Simplifications vs the full Finch block (documented in DESIGN.md):
+token-shift interpolation uses static per-channel mixing for r/k/v/g and the
+data-dependent LoRA path only for the decay w — the architecture's defining
+feature.  Output gating, per-head group-norm, and the u-bonus are faithful.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.ctx import constrain
+from .common import ModelConfig, dense_init
+
+CHUNK = 64
+# Log-decay is clamped to [_W_FLOOR, _W_CLAMP].  The floor bounds the
+# intra-chunk exponent |cum| <= CHUNK * |_W_FLOOR| = 32, keeping the factored
+# chunk algorithm exact in f32 (exp(32) ~ 7.8e13 << f32 max) without any
+# 6D safety tensor.  This is a modeling constraint (w >= exp(-0.5) ~ 0.61),
+# documented in DESIGN.md; the sequential reference applies the same clamp.
+_W_CLAMP = -1e-4
+_W_FLOOR = -0.5
+
+
+def rwkv_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_headdim
+
+
+def init_time_mix(key, cfg: ModelConfig, dtype) -> dict:
+    d, r = cfg.d_model, cfg.rwkv_lora_rank
+    H, P = rwkv_heads(cfg), cfg.rwkv_headdim
+    ks = jax.random.split(key, 8)
+    return {
+        "mu": jax.random.uniform(ks[0], (4, d), jnp.float32),  # r,k,v,g static lerp
+        "mu_w": jax.random.uniform(ks[1], (d,), jnp.float32),
+        "w0": jnp.full((d,), -6.0, jnp.float32)
+        + jax.random.uniform(ks[2], (d,), jnp.float32),
+        "w_lora_a": dense_init(ks[3], (d, r), jnp.float32),
+        "w_lora_b": jnp.zeros((r, d), jnp.float32),
+        "u": (jax.random.uniform(ks[4], (H, P), jnp.float32) - 0.5),
+        "wr": dense_init(ks[5], (d, d), dtype),
+        "wk": dense_init(ks[6], (d, d), dtype),
+        "wv": dense_init(ks[7], (d, d), dtype),
+        "wg": dense_init(jax.random.fold_in(key, 101), (d, d), dtype),
+        "wo": dense_init(jax.random.fold_in(key, 102), (d, d), dtype),
+        "ln_w": jnp.ones((d,), jnp.float32),
+        "ln_b": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def init_channel_mix(key, cfg: ModelConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": jax.random.uniform(ks[0], (2, d), jnp.float32),  # k, r
+        "wk": dense_init(ks[1], (d, f), dtype),
+        "wv": dense_init(ks[2], (f, d), dtype, fan_in=f),
+        "wr": dense_init(jax.random.fold_in(key, 7), (d, d), dtype),
+    }
+
+
+def _shift(x: jax.Array, prev: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """x_{t-1} stream: (B,S,d) -> shifted (B,S,d); prev (B,d) is the carry."""
+    B, S, d = x.shape
+    if prev is None:
+        prev = jnp.zeros((B, d), x.dtype)
+    shifted = jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted, x[:, -1, :]
+
+
+def _decay_log(p, xw: jax.Array) -> jax.Array:
+    """Data-dependent log-decay in [_W_FLOOR, _W_CLAMP]. xw (B,S,d) f32."""
+    lora = jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    return jnp.clip(-jnp.exp(p["w0"] + lora), _W_FLOOR, _W_CLAMP)
+
+
+def wkv6_chunked(r, k, v, logw, u, init_state=None, chunk: int = CHUNK):
+    """Chunkwise WKV6.
+
+    r,k,v (B,S,H,P); logw (B,S,H,P) negative log-decays; u (H,P).
+    Returns (y (B,S,H,P) f32, state (B,H,P,P) f32).  State layout: [key, value].
+    """
+    B, S, H, P = r.shape
+    Q = min(chunk, S)
+    assert S % Q == 0
+    n = S // Q
+    f32 = jnp.float32
+    r, k, v, logw = (t.astype(f32).reshape(B, n, Q, H, P) for t in (r, k, v, logw))
+
+    cum = jnp.cumsum(logw, axis=2)  # inclusive (B,n,Q,H,P)
+    cum_prev = cum - logw  # exclusive: decay applied to state before step i
+    total = cum[:, :, -1]  # (B,n,H,P)
+
+    # intra-chunk scores: A[i,j] = (r_i * exp(cum_prev_i - cum_j)) . k_j, j < i.
+    # Factored form: exp(cum_prev_i) <= 1 always; exp(-cum_j) <= exp(Q*|floor|)
+    # = exp(32) which is f32-safe by the _W_FLOOR clamp (see module docstring).
+    ri = r * jnp.exp(cum_prev)
+    kj = k * jnp.exp(-cum)
+    scores = jnp.einsum("bnihp,bnjhp->bnhij", ri, kj)
+    tri = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+    scores = jnp.where(tri[None, None, None], scores, 0.0)
+    diag = jnp.einsum("bnihp,hp,bnihp->bnhi", r, u, k)  # u-bonus for j == i
+    y_intra = jnp.einsum("bnhij,bnjhp->bnihp", scores, v) + (
+        diag.transpose(0, 1, 3, 2)[..., None] * v
+    )
+
+    # chunk-state contribution of token j persisting to chunk end
+    decay_to_end = jnp.exp(total[:, :, None] - cum)  # (B,n,Q,H,P)
+    s_chunk = jnp.einsum("bnjhp,bnjhq->bnhpq", k * decay_to_end, v)  # p=key,q=val
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, P), f32)
+
+    def step(state, inp):
+        s_c, tot, r_c, cp_c = inp
+        y_in = jnp.einsum("bqhp,bhpv->bqhv", r_c * jnp.exp(cp_c), state)
+        new_state = state * jnp.exp(tot)[..., None] + s_c
+        return new_state, y_in
+
+    scan_in = (
+        s_chunk.transpose(1, 0, 2, 3, 4),
+        total.transpose(1, 0, 2, 3),
+        r.transpose(1, 0, 2, 3, 4),
+        cum_prev.transpose(1, 0, 2, 3, 4),
+    )
+    state, y_inter = jax.lax.scan(step, init_state, scan_in)
+    y = y_intra + y_inter.transpose(1, 0, 2, 3, 4)
+    return y.reshape(B, S, H, P), state
+
+
+def _group_norm_heads(y: jax.Array, w, b, eps: float) -> jax.Array:
+    """Per-head layer norm over P. y (B,S,H,P) f32; w/b (d,)."""
+    B, S, H, P = y.shape
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + eps)
+    yn = yn.reshape(B, S, H * P)
+    return yn * w + b
+
+
+def time_mix_forward(
+    p: dict,
+    x: jax.Array,  # (B,S,d)
+    cfg: ModelConfig,
+    *,
+    state=None,  # (B,H,P,P) f32
+    shift_prev=None,  # (B,d)
+    chunk: int = CHUNK,
+):
+    B, S, d = x.shape
+    H, P = rwkv_heads(cfg), cfg.rwkv_headdim
+    xs, new_shift = _shift(x, shift_prev)
+    mu = p["mu"].astype(x.dtype)
+    xr = x + (xs - x) * mu[0]
+    xk = x + (xs - x) * mu[1]
+    xv = x + (xs - x) * mu[2]
+    xg = x + (xs - x) * mu[3]
+    xw = (x + (xs - x) * p["mu_w"].astype(x.dtype)).astype(jnp.float32)
+    r = constrain((xr @ p["wr"]).reshape(B, S, H, P), "act_heads")
+    k = constrain((xk @ p["wk"]).reshape(B, S, H, P), "act_heads")
+    v = constrain((xv @ p["wv"]).reshape(B, S, H, P), "act_heads")
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = constrain(_decay_log(p, xw).reshape(B, S, H, P), "act_heads")
+    y, new_state = wkv6_chunked(r, k, v, logw, p["u"], init_state=state, chunk=min(chunk, S))
+    new_state = constrain(new_state, "act_state")
+    y = _group_norm_heads(y, p["ln_w"], p["ln_b"], cfg.norm_eps)
+    y = (y.astype(x.dtype) * g) @ p["wo"]
+    return y, new_state, new_shift
+
+
+def time_mix_decode(p, x, cfg: ModelConfig, *, state, shift_prev):
+    """x (B,1,d). O(1) recurrence."""
+    B, _, d = x.shape
+    H, P = rwkv_heads(cfg), cfg.rwkv_headdim
+    xs = shift_prev[:, None, :]
+    mu = p["mu"].astype(x.dtype)
+    xr = x + (xs - x) * mu[0]
+    xk = x + (xs - x) * mu[1]
+    xv = x + (xs - x) * mu[2]
+    xg = x + (xs - x) * mu[3]
+    xw = (x + (xs - x) * p["mu_w"].astype(x.dtype)).astype(jnp.float32)
+    r = (xr @ p["wr"]).reshape(B, H, P).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(B, H, P).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(B, H, P).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = jnp.exp(_decay_log(p, xw).reshape(B, H, P))
+    y = jnp.einsum("bhp,bhpv->bhv", r, state) + jnp.einsum(
+        "bhp,hp,bhp,bhv->bhv", r, p["u"], k, v
+    )
+    new_state = state * w[..., None] + jnp.einsum("bhp,bhv->bhpv", k, v)
+    y = _group_norm_heads(y[:, None], p["ln_w"], p["ln_b"], cfg.norm_eps)
+    y = (y.astype(x.dtype) * g) @ p["wo"]
+    return y, new_state, x[:, -1, :]
+
+
+# ---------------------------------------------------------------------------
+# Channel mix (the GLASS target: h = relu(xk Wk)^2, y = sigma(xr Wr) * (h Wv))
+# ---------------------------------------------------------------------------
+
+
+def channel_mix_forward(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    shift_prev=None,
+    mask: Optional[jax.Array] = None,
+    probe: Optional[jax.Array] = None,
+    collect_stats: bool = False,
+    stats_mask: Optional[jax.Array] = None,  # (B, S)
+):
+    from .ffn import token_normalized_abs  # local import to avoid cycle
+
+    xs, new_shift = _shift(x, shift_prev)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    if probe is not None:
+        h = h * (1.0 + probe.astype(h.dtype))
+    stats = None
+    if collect_stats:
+        a = token_normalized_abs(h)
+        if stats_mask is not None:
+            a = a * stats_mask.astype(jnp.float32)[..., None]
+            count = jnp.sum(stats_mask.astype(jnp.float32))
+        else:
+            count = jnp.asarray(float(x.shape[0] * x.shape[1]), jnp.float32)
+        stats = {
+            "sum_abs": jnp.sum(a.reshape(-1, a.shape[-1]), axis=0),
+            "count": count,
+        }
+    if mask is not None:
+        h = h * mask.astype(h.dtype)
+    y = jax.nn.sigmoid(xr @ p["wr"]) * (h @ p["wv"])
+    return y, new_shift, stats

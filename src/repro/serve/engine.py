@@ -1,0 +1,113 @@
+"""Batched serving engine with first-class GLASS integration.
+
+Request lifecycle (paper Fig. 2 right):
+
+  1. prefill the (padded) prompt batch, collecting local activation stats;
+  2. fuse local stats with the offline global prior -> per-layer masks;
+  3. gather compact FFN weights once;
+  4. steady-state decode with the compact weights (density * FLOPs/bytes).
+
+``glass=None`` serves dense.  ``mode="masked"`` keeps full weights and
+multiplies the mask in (the block-sparse-kernel deployment); ``"compact"``
+gathers (the fast-memory-residency deployment).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.fusion import GlassConfig
+from ..core.glass import build_masks, compact_params
+from ..models.api import Model
+from .sampling import sample
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray  # (B, max_new)
+    logits_seq: Optional[np.ndarray]  # (B, max_new, V) when requested
+    masks: Optional[object]
+
+
+class Engine:
+    def __init__(
+        self,
+        model: Model,
+        params,
+        *,
+        glass: Optional[GlassConfig] = None,
+        global_prior=None,
+        glass_mode: str = "compact",  # compact | masked
+    ):
+        self.model = model
+        self.params = params
+        self.glass = glass
+        self.prior = global_prior
+        self.glass_mode = glass_mode
+        if glass is not None:
+            assert global_prior is not None, "GLASS needs the offline prior"
+
+    def generate(
+        self,
+        prompts: jax.Array,  # (B, S) int32, right-aligned/padded by caller
+        max_new: int,
+        *,
+        rng: Optional[jax.Array] = None,
+        temperature: float = 0.0,  # 0 => greedy
+        top_k: int = 0,
+        return_logits: bool = False,
+    ) -> GenerationResult:
+        model, params = self.model, self.params
+        B, S = prompts.shape
+        logits, cache, stats = jax.jit(
+            lambda p, t: model.prefill(p, {"tokens": t}, S + max_new)
+        )(params, prompts)
+
+        masks = None
+        compact = None
+        ffn_masks = None
+        if self.glass is not None:
+            masks = build_masks(stats, self.prior, self.glass)
+            if self.glass_mode == "compact":
+                compact = compact_params(model, params, masks.idx)
+            else:
+                ffn_masks = masks.mask
+
+        rng = rng if rng is not None else jax.random.key(0)
+
+        def pick(r, lg):
+            if temperature <= 0.0:
+                return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            return sample(r, lg, temperature=temperature, top_k=top_k).astype(jnp.int32)
+
+        @jax.jit
+        def decode_loop(params, cache, first_tok, rng):
+            def body(carry, i):
+                cache, tok, rng = carry
+                rng, krng = jax.random.split(rng)
+                lg, cache = model.decode_step(
+                    params, tok[:, None], cache, S + i,
+                    ffn_masks=ffn_masks, compact_layers=compact,
+                )
+                nxt = pick(krng, lg[:, -1].astype(jnp.float32))
+                return (cache, nxt, rng), (nxt, lg[:, -1] if return_logits else jnp.zeros((B, 0)))
+
+            (_, _, _), (toks, lgs) = jax.lax.scan(
+                body, (cache, first_tok, rng), jnp.arange(max_new, dtype=jnp.int32)
+            )
+            return toks.T, jnp.swapaxes(lgs, 0, 1)
+
+        rng, krng = jax.random.split(rng)
+        first = pick(krng, logits[:, -1].astype(jnp.float32))
+        toks, lgs = decode_loop(params, cache, first, rng)
+        out_tokens = np.asarray(jnp.concatenate([first[:, None], toks[:, :-1]], axis=1))
+        return GenerationResult(
+            tokens=out_tokens,
+            logits_seq=np.asarray(lgs) if return_logits else None,
+            masks=masks,
+        )

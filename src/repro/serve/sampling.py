@@ -1,0 +1,61 @@
+"""Sampling primitives shared by the serving engine and NPS.
+
+Implements the paper's NPS sampling settings (App. B.3): top-k filtering,
+temperature, and a bigram repetition penalty used for the first "hot" steps.
+The bigram tracker is a dense (B, V, V) boolean table — exact and fast for
+the vocabularies used in-repo; swap for a hashed ring buffer at 100k+ vocab
+(the table is only used offline during prior computation, never at serve
+time).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def top_k_filter(logits: jax.Array, k: int) -> jax.Array:
+    """Keep the k largest logits per row, others -> -inf."""
+    if k <= 0 or k >= logits.shape[-1]:
+        return logits
+    vals, _ = jax.lax.top_k(logits, k)
+    thresh = vals[..., -1:]
+    return jnp.where(logits >= thresh, logits, NEG)
+
+
+def sample(
+    rng: jax.Array,
+    logits: jax.Array,  # (B, V) f32
+    *,
+    temperature: jax.Array | float = 1.0,
+    top_k: int = 0,
+) -> jax.Array:
+    logits = logits.astype(jnp.float32) / jnp.maximum(jnp.asarray(temperature, jnp.float32), 1e-6)
+    logits = top_k_filter(logits, top_k)
+    return jax.random.categorical(rng, logits, axis=-1)
+
+
+def bigram_init(batch: int, vocab: int) -> jax.Array:
+    return jnp.zeros((batch, vocab, vocab), bool)
+
+
+def bigram_update(seen: jax.Array, prev_tok: jax.Array, new_tok: jax.Array) -> jax.Array:
+    """Mark (prev, new) bigram per batch row. prev/new (B,) int32."""
+    b = jnp.arange(seen.shape[0])
+    return seen.at[b, prev_tok, new_tok].set(True)
+
+
+def bigram_penalize(
+    logits: jax.Array,  # (B, V)
+    seen: jax.Array,  # (B, V, V)
+    prev_tok: jax.Array,  # (B,)
+    penalty: float,
+    enabled: jax.Array | bool = True,
+) -> jax.Array:
+    b = jnp.arange(logits.shape[0])
+    seen_row = seen[b, prev_tok].astype(jnp.float32)  # (B, V)
+    pen = penalty * seen_row * jnp.asarray(enabled, jnp.float32)
+    return logits - pen

@@ -1,0 +1,68 @@
+"""Activation-sharding constraint context.
+
+Model code stays sharding-agnostic: it calls ``constrain(x, "act_btd")`` at
+block boundaries, which is a no-op unless a rule set is installed (by the
+step builders / dry-run) via ``use_rules``.  Rules map logical activation
+names to PartitionSpecs — the planner emits mode-specific rule sets, and the
+perf loop swaps rule sets (e.g. Megatron-style sequence parallelism) without
+touching model code.
+
+Rule names:
+  act_btd        residual stream (B, S, d)
+  act_btf        FFN hidden (B, S, f)
+  act_heads      attention/ssm head activations (B, S, heads..., hd)
+  logits         LM head output (B, S, V)
+  moe_expert     dispatched expert tensors (E, B, C, ...)
+  decode_q       decode-time query (B, 1, heads..., hd)
+  decode_cache   per-layer KV cache inside the decode scan (B, S_max, K, hd)
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_RULES: contextvars.ContextVar = contextvars.ContextVar("sharding_rules", default=None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Dict[str, P]):
+    token = _RULES.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    """Apply the named activation constraint if a rule set is active."""
+    state = _RULES.get()
+    if state is None:
+        return x
+    mesh, rules = state
+    spec = rules.get(name)
+    if spec is None:
+        return x
+    # pad/truncate the spec to the array rank (rules are written for the
+    # canonical rank; scan bodies may see per-layer views without lead dims)
+    entries = list(spec)
+    if len(entries) > x.ndim:
+        entries = entries[: x.ndim]
+    entries += [None] * (x.ndim - len(entries))
+    # drop axes that don't divide
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fixed = []
+    for dim, ax in zip(x.shape, entries):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        n = 1
+        for a in axes:
+            n *= sizes.get(a, 1)
+        fixed.append(ax if dim % n == 0 else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))

@@ -1,0 +1,377 @@
+"""Sharding planner: maps parameter/cache/batch trees to PartitionSpecs.
+
+Philosophy (t5x/MaxText-style, specialized per family):
+
+  * ``model`` axis carries tensor parallelism: vocab, attention heads, FFN
+    hidden width, per-expert FFN width, SSM/RWKV heads.
+  * ``data`` axis carries batch (together with ``pod`` on multi-pod meshes);
+    for MoE it doubles as the expert-parallel axis (classic DP+EP); in train
+    mode it optionally FSDP-shards weight d_model dims and always ZeRO-shards
+    optimizer moments.
+  * divisibility is checked against the actual dim — anything that does not
+    divide falls back to the next candidate (ultimately replication), so one
+    planner serves every architecture in the pool.
+
+Mode differences:
+  * train/prefill — activations batch-sharded; attention sharded by heads.
+  * decode — KV caches shard over heads when kv_heads % model == 0, else over
+    *sequence* (flash-decode / split-K style: softmax over a seq-sharded axis
+    lowers to all-reduce(max)/all-reduce(sum)); batch=1 long-context cells
+    replicate batch and lean on sequence sharding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models.common import ModelConfig
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+@dataclass
+class Planner:
+    cfg: ModelConfig
+    mesh: Mesh
+    mode: str = "train"  # train | prefill | decode
+    fsdp: bool = False  # additionally shard weight d_model dims over data
+    # pure_dp: no tensor parallelism — the model axis joins the batch axes and
+    # weights are ZeRO-3/FSDP-sharded over (data, model).  The right regime
+    # for small-dense training where TP all-reduces dominate (see §Perf).
+    pure_dp: bool = False
+
+    def __post_init__(self):
+        self.model_n = 1 if self.pure_dp else self.mesh.shape.get("model", 1)
+        self.data_n = self.mesh.shape.get("data", 1)
+        pod = ("pod",) if "pod" in self.mesh.axis_names else ()
+        if self.pure_dp:
+            self.dp = pod + ("data", "model")
+            self.fsdp_axes = ("data", "model")
+            self.fsdp = True
+        else:
+            self.dp = pod + ("data",)
+            self.fsdp_axes = ("data",)
+        self.dp_n = int(np.prod([self.mesh.shape[a] for a in self.dp]))
+        cfg = self.cfg
+        self.kv_tp = (
+            cfg.n_kv_heads % self.model_n == 0 and cfg.gqa_layout == "grouped"
+        ) and not self.pure_dp
+        self.q_tp = (
+            self.kv_tp
+            if cfg.gqa_layout == "grouped"
+            else (cfg.n_heads % self.model_n == 0 and not self.pure_dp)
+        )
+        if self.pure_dp:
+            self.kv_tp = self.q_tp = False
+
+    # -- helpers -------------------------------------------------------------
+
+    def _fits(self, dim: int, axes) -> bool:
+        if axes is None:
+            return True
+        axes = (axes,) if isinstance(axes, str) else tuple(axes)
+        n = int(np.prod([self.mesh.shape[a] for a in axes]))
+        return dim % n == 0
+
+    def _spec(self, shape, *tail) -> P:
+        """Build spec: trailing ``tail`` entries align to trailing dims,
+        leading (stacked-layer) dims replicate.  Drops axes that don't
+        divide."""
+        nd = len(shape)
+        tail = list(tail)
+        full = [None] * (nd - len(tail)) + tail
+        out = []
+        for dim, ax in zip(shape, full):
+            out.append(ax if (ax is not None and self._fits(dim, ax)) else None)
+        return P(*out)
+
+    @staticmethod
+    def _axes_used(spec) -> set:
+        used = set()
+        for e in spec:
+            if e is None:
+                continue
+            used.update((e,) if isinstance(e, str) else e)
+        return used
+
+    def _maybe_fsdp(self, spec: P, shape) -> P:
+        """In fsdp mode, shard the first replicated dim of a >=2D weight over
+        the fsdp axes (weights only — callers skip 1D params)."""
+        if not (self.fsdp and (self.mode == "train" or self.pure_dp)):
+            return spec
+        if "data" in self._axes_used(spec):
+            return spec
+        axes = self.fsdp_axes if len(self.fsdp_axes) > 1 else "data"
+        n = int(np.prod([self.mesh.shape[a] for a in self.fsdp_axes]))
+        out = list(spec) + [None] * (len(shape) - len(spec))
+        for i, (dim, ax) in enumerate(zip(shape, out)):
+            if ax is None and dim % n == 0 and dim >= n:
+                out[i] = axes
+                break
+        return P(*out)
+
+    # -- parameter rules -----------------------------------------------------
+
+    def param_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        last = path.split("/")[-1]
+        parent = path.split("/")[-2] if "/" in path else ""
+        cfg = self.cfg
+
+        if self.pure_dp:
+            # no TP anywhere: >=2D weights are ZeRO-3/FSDP over (data, model),
+            # 1D params replicate.
+            if len(shape) >= 2:
+                return self._maybe_fsdp(P(*([None] * len(shape))), shape)
+            return P(*([None] * len(shape)))
+
+        # embeddings / head
+        if last == "embed":
+            return self._spec(shape, "model", None)
+        if last == "lm_head":
+            return self._spec(shape, None, "model")
+        if last == "pos_dec":
+            return P(*([None] * len(shape)))
+
+        # attention projections
+        if parent in ("attn", "self_attn", "cross_attn"):
+            if last == "wq":
+                s = self._spec(shape, None, "model") if self.q_tp else self._spec(shape)
+                return self._maybe_fsdp(s, shape)
+            if last in ("wk", "wv"):
+                s = self._spec(shape, None, "model") if self.kv_tp else self._spec(shape)
+                return self._maybe_fsdp(s, shape)
+            if last == "wo":
+                s = self._spec(shape, "model", None) if self.q_tp else self._spec(shape)
+                return self._maybe_fsdp(s, shape)
+
+        # dense FFN
+        if parent == "ffn" or (parent == "cm" and last in ("wk", "wv", "wr")):
+            if last in ("w_up", "w_gate", "wk", "wr"):
+                return self._maybe_fsdp(self._spec(shape, None, "model"), shape)
+            if last in ("w_down", "wv"):
+                return self._maybe_fsdp(self._spec(shape, "model", None), shape)
+
+        # MoE: expert dim over data (EP) when divisible, else FSDP d_model
+        if parent == "moe":
+            if last == "router":
+                return P(*([None] * len(shape)))
+            E = cfg.n_experts * cfg.expert_replication  # replica slots
+            ep = E % self.data_n == 0
+            if last in ("w_up", "w_gate"):  # (..., E, d, f)
+                if ep:
+                    return self._spec(shape, "data", None, "model")
+                return self._spec(shape, None, "data", "model")
+            if last == "w_down":  # (..., E, f, d)
+                if ep:
+                    return self._spec(shape, "data", "model", None)
+                return self._spec(shape, None, "model", "data")
+
+        # mamba2 mixer
+        if parent == "mixer":
+            if last in ("w_z", "w_x", "w_dt"):
+                return self._maybe_fsdp(self._spec(shape, None, "model"), shape)
+            if last in ("w_B", "w_C", "conv_B_w", "conv_B_b", "conv_C_w", "conv_C_b"):
+                return P(*([None] * len(shape)))
+            if last == "conv_x_w":
+                return self._spec(shape, "model", None)
+            if last in ("conv_x_b", "norm_w"):
+                return self._spec(shape, "model")
+            if last in ("A_log", "D", "dt_bias"):
+                return self._spec(shape, "model")
+            if last == "out_proj":
+                return self._maybe_fsdp(self._spec(shape, "model", None), shape)
+
+        # rwkv6 time mix
+        if parent == "tm":
+            if last in ("wr", "wk", "wv", "wg"):
+                return self._maybe_fsdp(self._spec(shape, None, "model"), shape)
+            if last == "wo":
+                return self._maybe_fsdp(self._spec(shape, "model", None), shape)
+            if last == "u":
+                return self._spec(shape, "model", None)
+            return P(*([None] * len(shape)))
+
+        # norms, biases, scalars, lora adapters: replicate
+        return P(*([None] * len(shape)))
+
+    def params(self, param_shapes) -> Any:
+        """param_shapes: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+
+        def one(path, leaf):
+            spec = self.param_spec(_path_str(path), leaf.shape)
+            return NamedSharding(self.mesh, spec)
+
+        return jax.tree_util.tree_map_with_path(one, param_shapes)
+
+    def param_specs_tree(self, param_shapes) -> Any:
+        def one(path, leaf):
+            return self.param_spec(_path_str(path), leaf.shape)
+
+        return jax.tree_util.tree_map_with_path(one, param_shapes)
+
+    # -- optimizer state (ZeRO-1) --------------------------------------------
+
+    def opt_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        """Moments: param spec + shard the first replicated dim over data
+        (ZeRO-1) — unless the param spec already consumes the data axis
+        (MoE expert-parallel / FSDP weights)."""
+        spec = self.param_spec(path, shape)
+        if "data" in self._axes_used(spec):
+            return spec
+        out = list(spec) + [None] * (len(shape) - len(spec))
+        if len(shape) >= 2:
+            for i, (dim, ax) in enumerate(zip(shape, out)):
+                if ax is None and dim % self.data_n == 0 and dim >= self.data_n:
+                    out[i] = "data"
+                    break
+        return P(*out)
+
+    # -- batch / cache / activation rules ------------------------------------
+
+    def batch_spec(self, batch: int) -> P:
+        return P(self.dp if batch % self.dp_n == 0 else None, None)
+
+    def data_shardings(self, batch_shapes: Dict[str, Any]) -> Dict[str, NamedSharding]:
+        out = {}
+        for name, sds in batch_shapes.items():
+            b = sds.shape[0]
+            b_ax = self.dp if b % self.dp_n == 0 else None
+            spec = P(b_ax, *([None] * (len(sds.shape) - 1)))
+            out[name] = NamedSharding(self.mesh, spec)
+        return out
+
+    def kv_cache_spec(self, shape: Tuple[int, ...]) -> P:
+        """(L?, B, S_max, K, hd): heads over model when divisible, else
+        sequence over model; batch over dp when divisible, else sequence
+        additionally over data."""
+        L_lead = len(shape) - 4
+        B, S, K, hd = shape[-4:]
+        b_ax = self.dp if B % self.dp_n == 0 else None
+        if K % self.model_n == 0:
+            k_ax, s_ax = "model", None
+        else:
+            k_ax, s_ax = None, "model"
+        if b_ax is None and s_ax is None and S % self.data_n == 0:
+            s_ax = "data"  # long-context batch=1: spread cache over data too
+        elif b_ax is None and s_ax == "model" and S % (self.data_n * self.model_n) == 0:
+            s_ax = ("data", "model")
+        return P(*([None] * L_lead), b_ax, s_ax, k_ax, None)
+
+    def cache_shardings(self, cache_shapes) -> Any:
+        cfg = self.cfg
+
+        def one(path, leaf):
+            name = _path_str(path)
+            last = name.split("/")[-1]
+            shp = leaf.shape
+            if last in ("k", "v", "xk", "xv"):
+                return NamedSharding(self.mesh, self.kv_cache_spec(shp))
+            if last in ("state",):  # rwkv (L,B,H,P,P)
+                b_ax = self.dp if shp[1] % self.dp_n == 0 else None
+                h_ax = "model" if shp[2] % self.model_n == 0 else None
+                return NamedSharding(self.mesh, P(None, b_ax, h_ax, None, None))
+            if last in ("ssm", "tail_ssm"):  # (..., B, H, N, P)
+                lead = len(shp) - 4
+                b_ax = self.dp if shp[-4] % self.dp_n == 0 else None
+                h_ax = "model" if shp[-3] % self.model_n == 0 else None
+                return NamedSharding(self.mesh, P(*([None] * lead), b_ax, h_ax, None, None))
+            if last == "x" and "conv" in name:  # conv x-carry (..., B, K-1, d_in)
+                lead = len(shp) - 3
+                b_ax = self.dp if shp[-3] % self.dp_n == 0 else None
+                c_ax = "model" if shp[-1] % self.model_n == 0 else None
+                return NamedSharding(self.mesh, P(*([None] * lead), b_ax, None, c_ax))
+            if last in ("B", "C") and "conv" in name:
+                lead = len(shp) - 3
+                b_ax = self.dp if shp[-3] % self.dp_n == 0 else None
+                return NamedSharding(self.mesh, P(*([None] * lead), b_ax, None, None))
+            if last in ("shift_tm", "shift_cm"):  # (L, B, d)
+                b_ax = self.dp if shp[1] % self.dp_n == 0 else None
+                return NamedSharding(self.mesh, P(None, b_ax, None))
+            # fallback: replicate
+            return NamedSharding(self.mesh, P(*([None] * len(shp))))
+
+        return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+    def logits_spec(self) -> P:
+        b_ax = self.dp
+        return P(b_ax, None, "model")
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    # -- activation constraint rules (consumed via sharding.ctx.constrain) ----
+
+    def activation_rules(self, batch: int, seq_parallel: bool = False) -> Dict[str, P]:
+        """Mode- and cell-specific activation rule set.
+
+        ``seq_parallel``: Megatron-style SP — residual stream sharded over the
+        model axis along sequence between blocks (saves the layer-input stash
+        16x in train; adds all-gather/reduce-scatter at block boundaries)."""
+        cfg = self.cfg
+        dp = self.dp
+        b_ok = batch % self.dp_n == 0
+        b_ax = dp if b_ok else None
+        head_ax = "model" if self.q_tp else None
+        n_slots = cfg.n_experts * cfg.expert_replication
+        ep_ax = "data" if (n_slots and n_slots % self.data_n == 0) else None
+        # K/V layout in attention compute:
+        #   kv_tp            — heads sharded (grouped GQA, kv % model == 0)
+        #   q sharded only   — kv replicated (repeated GQA; the per-shard q
+        #                      slice picks its kv head locally)
+        #   nothing sharded  — (whisper, 20 heads): shard the KV *sequence*
+        #                      over model: scores/softmax partition over kv
+        #                      (all-reduce row stats + psum of the value
+        #                      contraction) — flash-decode at prefill scale.
+        if self.kv_tp:
+            kv_rule = P(b_ax, None, "model")
+        elif head_ax:
+            kv_rule = P(b_ax, None, None)
+        else:
+            kv_rule = P(b_ax, "model", None)
+        rules = {
+            "act_btd": P(b_ax, "model" if seq_parallel else None, None),
+            "act_btf": P(b_ax, None, "model"),
+            "act_heads": P(b_ax, None, head_ax),
+            "act_kv": kv_rule,
+            "act_attn_out": P(b_ax, None, head_ax),
+            "act_state": P(b_ax, "model", None, None),  # (B, H, ...) ssm/rwkv state
+            "logits": P(b_ax, None, "model"),
+            "moe_expert": P(ep_ax, None, None, None),
+            "moe_hidden": P(ep_ax, None, None, "model"),
+        }
+        # KV-cache layout (used by decode steps AND prefill cache emission)
+        k_ax = "model" if cfg.n_kv_heads % self.model_n == 0 else None
+        s_ax = None if k_ax else "model"
+        if not b_ok and s_ax == "model":
+            s_ax = ("data", "model")
+        elif not b_ok and s_ax is None:
+            s_ax = "data"
+        rules["decode_cache"] = P(b_ax, s_ax, k_ax, None)
+        if self.mode == "decode":
+            rules["decode_q"] = P(b_ax, None, k_ax if cfg.gqa_layout == "grouped" else None)
+        if self.pure_dp:
+            # the model axis carries batch: strip it from every non-batch dim
+            def strip(spec: P) -> P:
+                out = [spec[0]] + [
+                    None if (e == "model" or (isinstance(e, tuple) and "model" in e)) else e
+                    for e in list(spec)[1:]
+                ]
+                return P(*out)
+
+            rules = {k2: strip(v) for k2, v in rules.items()}
+        return rules

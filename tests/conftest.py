@@ -1,0 +1,22 @@
+"""Test session config.
+
+NOTE: no XLA_FLAGS here by design — smoke tests and benches must see ONE
+device.  Multi-device tests spawn subprocesses (tests/helpers.py) that set
+--xla_force_host_platform_device_count before jax initializes.
+"""
+import os
+import sys
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)  # for tests.helpers / benchmarks.* imports
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)

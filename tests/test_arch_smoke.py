@@ -1,0 +1,39 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family config,
+one forward + one train step on CPU, asserting shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED, PAPER_MODELS, get_config, tiny_variant
+from repro.models import build_model
+from repro.train.optim import OptConfig, adamw_update, init_opt_state
+
+
+@pytest.mark.parametrize("arch", ASSIGNED + PAPER_MODELS)
+def test_arch_smoke(arch):
+    cfg = tiny_variant(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(jax.random.key(2), (B, S, cfg.d_model), jnp.float32)
+    logits = model.logits(p := params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    # one train step
+    opt = init_opt_state(params)
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda pp: model.loss(pp, batch), has_aux=True
+    )(params)
+    assert jnp.isfinite(loss)
+    params2, opt2, om = adamw_update(params, grads, opt, OptConfig(lr=1e-3))
+    loss2, _ = model.loss(params2, batch)
+    assert jnp.isfinite(loss2)
+    # one decode step off a prefill
+    logits_p, cache, stats = model.prefill(params, batch, max_len=S + 4)
+    lg, _ = model.decode_step(params, toks[:, :1], cache, jnp.int32(S))
+    assert lg.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(lg)))
+    assert stats is not None

@@ -1,0 +1,43 @@
+"""Data pipeline: determinism, resumability, host sharding."""
+import numpy as np
+
+from repro.data.pipeline import PackedLM, PipelineState
+from repro.data.synthetic import CorpusConfig, SyntheticCorpus, shifted_corpus
+from repro.data.tokenizer import decode, encode
+
+
+def test_tokenizer_roundtrip():
+    s = "hello world, tofu banana!"
+    assert decode(encode(s)) == s
+
+
+def test_corpus_deterministic():
+    c1, c2 = SyntheticCorpus(), SyntheticCorpus()
+    assert c1.document(42) == c2.document(42)
+    assert c1.document(1) != c1.document(2)
+
+
+def test_shifted_corpus_differs():
+    assert SyntheticCorpus().document(0) != shifted_corpus().document(0)
+
+
+def test_pipeline_resume_bit_identical():
+    corpus = SyntheticCorpus()
+    p1 = PackedLM(corpus, batch=2, seq=64)
+    batches = [p1.next_batch() for _ in range(5)]
+    state = PipelineState.from_dict(p1.state.to_dict())
+    # fresh pipeline fast-forwarded via saved state reproduces the stream
+    p2 = PackedLM(corpus, batch=2, seq=64, state=state)
+    b1 = p1.next_batch()
+    b2 = p2.next_batch()
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_host_sharding_disjoint():
+    corpus = SyntheticCorpus()
+    h0 = PackedLM(corpus, 1, 64, host_index=0, host_count=2)
+    h1 = PackedLM(corpus, 1, 64, host_index=1, host_count=2)
+    h0.next_batch(); h1.next_batch()
+    # doc indices drawn by the two hosts never overlap
+    assert h0.state.next_doc % 2 == 0
+    assert h1.state.next_doc % 2 == 1

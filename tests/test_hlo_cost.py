@@ -1,0 +1,30 @@
+"""Trip-count-aware HLO analyzer vs hand-computed costs."""
+from tests.helpers import run_with_devices
+
+
+def test_scan_flops_and_collectives_scaled():
+    out = run_with_devices("""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh(4, 2)
+W = jax.ShapeDtypeStruct((8, 256, 512), jnp.bfloat16)
+x = jax.ShapeDtypeStruct((16, 256), jnp.bfloat16)
+def f(ws, x):
+    def body(c, w):
+        y = jnp.tanh(c @ w @ w.T)
+        return y, jnp.sum(y)
+    out, s = jax.lax.scan(body, x, ws)
+    return jnp.sum(out) + jnp.sum(s)
+with mesh:
+    comp = jax.jit(f, in_shardings=(NamedSharding(mesh, P(None, None, "model")),
+                                    NamedSharding(mesh, P("data", None)))).lower(W, x).compile()
+rep = analyze_hlo(comp.as_text())
+exp = (2*4*256*256 + 2*4*256*256) * 8  # per-device, 8 scanned layers
+assert abs(rep.dot_flops - exp) / exp < 0.05, (rep.dot_flops, exp)
+ar = rep.collective_bytes.get("all-reduce", 0)
+assert ar >= 8 * 4 * 256 * 4  # >= 8 layer ARs of f32(4,256)
+print("OK", rep.dot_flops, ar)
+""")
+    assert "OK" in out

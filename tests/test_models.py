@@ -1,0 +1,147 @@
+"""Model-substrate correctness: decode==full-forward per family, chunked
+algorithms vs sequential references, GQA layouts, MoE strategies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, build_model
+from repro.models.mamba2 import ssd_chunked
+from repro.models.rwkv6 import wkv6_chunked
+
+BASE = dict(n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+            d_ff=128, vocab_size=97, dtype="float32", remat="none")
+
+FAMILIES = {
+    "dense": ModelConfig(name="t-dense", family="dense", **BASE),
+    "gemma2": ModelConfig(name="t-g2", family="dense", attn_pattern="local_global",
+                          sliding_window=8, attn_softcap=50.0, logit_softcap=30.0,
+                          sandwich_norms=True, embed_scale=True, **BASE),
+    "moe": ModelConfig(name="t-moe", family="moe", n_experts=4, n_experts_per_tok=2,
+                       moe_strategy="dense", **BASE),
+    "rwkv": ModelConfig(name="t-rwkv", family="ssm", rwkv_headdim=16, **BASE),
+    "zamba": ModelConfig(name="t-z", family="hybrid", attn_every=2, ssm_state=16,
+                         mamba_headdim=16, **BASE),
+    "vlm": ModelConfig(name="t-vlm", family="vlm", rope_type="mrope",
+                       mrope_sections=(4, 2, 2), **BASE),
+}
+
+
+@pytest.mark.parametrize("name", sorted(FAMILIES))
+def test_decode_matches_full_forward(name):
+    cfg = FAMILIES[name]
+    m = build_model(cfg)
+    p = m.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 17), 0, cfg.vocab_size)
+    full = m.logits(p, {"tokens": toks})
+    assert not bool(jnp.any(jnp.isnan(full)))
+    logits, cache, stats = m.prefill(p, {"tokens": toks[:, :16]}, max_len=32)
+    lg, cache = m.decode_step(p, toks[:, 16:17], cache, jnp.int32(16))
+    np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, 16]), atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full[:, :16]), atol=2e-4, rtol=1e-3)
+
+
+def test_encdec_decode_matches_full():
+    cfg = ModelConfig(name="t-w", family="encdec", is_encoder_decoder=True,
+                      n_enc_layers=2, n_layers=2, gated_ffn=False, ffn_act="gelu",
+                      rope_type="none", max_positions=64, d_model=64, n_heads=4,
+                      n_kv_heads=4, head_dim=16, d_ff=128, vocab_size=97,
+                      dtype="float32", remat="none")
+    m = build_model(cfg)
+    p = m.init(jax.random.key(0))
+    frames = jax.random.normal(jax.random.key(2), (2, 8, 64), jnp.float32)
+    toks = jax.random.randint(jax.random.key(1), (2, 17), 0, 97)
+    full = m.logits(p, {"frames": frames, "tokens": toks})
+    logits, cache, stats = m.prefill(p, {"frames": frames, "tokens": toks[:, :16]}, max_len=32)
+    lg, _ = m.decode_step(p, toks[:, 16:17], cache, jnp.int32(16))
+    np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, 16]), atol=2e-4, rtol=1e-3)
+
+
+def test_gqa_layouts_equivalent():
+    cfg_g = ModelConfig(name="g", family="dense", gqa_layout="grouped",
+                        n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, head_dim=8,
+                        d_ff=128, vocab_size=97, dtype="float32", remat="none")
+    m = build_model(cfg_g)
+    p = m.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, 97)
+    lg = m.logits(p, {"tokens": toks})
+    lr = build_model(cfg_g.replace(gqa_layout="repeated")).logits(p, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lr), atol=2e-5, rtol=1e-4)
+
+
+def test_chunked_attention_exact():
+    cfg_d = FAMILIES["gemma2"].replace(attn_chunk=10**9)
+    cfg_c = cfg_d.replace(attn_chunk=8)
+    m = build_model(cfg_d)
+    p = m.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 64), 0, 97)
+    ld = m.logits(p, {"tokens": toks})
+    lc = build_model(cfg_c).logits(p, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(lc), atol=2e-4, rtol=1e-3)
+
+
+def test_moe_dropping_matches_dense_at_high_capacity():
+    cfg = FAMILIES["moe"].replace(capacity_factor=8.0)
+    m = build_model(cfg)
+    p = m.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, 97)
+    ld = m.logits(p, {"tokens": toks})
+    lc = build_model(cfg.replace(moe_strategy="dropping", moe_chunk=8)).logits(p, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(lc), atol=2e-5, rtol=1e-4)
+
+
+def _ssd_sequential(xh, dt, a, Bm, Cm):
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    state = np.zeros((B, H, N, P), np.float64)
+    ys = np.zeros((B, S, H, P), np.float64)
+    xh, dt, Bm, Cm = map(lambda t: np.asarray(t, np.float64), (xh, dt, Bm, Cm))
+    a = np.asarray(a, np.float64)
+    for t in range(S):
+        decay = np.exp(dt[:, t] * a)  # (B,H)
+        upd = np.einsum("bN,bhp,bh->bhNp", Bm[:, t], xh[:, t], dt[:, t])
+        state = state * decay[:, :, None, None] + upd
+        ys[:, t] = np.einsum("bN,bhNp->bhp", Cm[:, t], state)
+    return ys, state
+
+
+def test_ssd_chunked_vs_sequential():
+    rng = np.random.default_rng(0)
+    B, S, H, P, N = 2, 32, 3, 4, 5
+    xh = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, size=(B, S, H)), jnp.float32)
+    a = jnp.asarray(-rng.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    y, st = ssd_chunked(xh, dt, a, Bm, Cm, chunk=8)
+    y_ref, st_ref = _ssd_sequential(xh, dt, a, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), y_ref, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), st_ref, atol=1e-4, rtol=1e-4)
+
+
+def _wkv6_sequential(r, k, v, logw, u):
+    B, S, H, P = r.shape
+    r, k, v, logw = map(lambda t: np.asarray(t, np.float64), (r, k, v, logw))
+    u = np.asarray(u, np.float64)
+    state = np.zeros((B, H, P, P), np.float64)
+    ys = np.zeros((B, S, H, P), np.float64)
+    for t in range(S):
+        kt, vt, rt = k[:, t], v[:, t], r[:, t]
+        ys[:, t] = np.einsum("bhp,bhpv->bhv", rt, state) + np.einsum(
+            "bhp,hp,bhp,bhv->bhv", rt, u, kt, vt)
+        state = state * np.exp(logw[:, t])[..., None] + np.einsum("bhp,bhv->bhpv", kt, vt)
+    return ys, state
+
+
+def test_wkv6_chunked_vs_sequential():
+    rng = np.random.default_rng(1)
+    B, S, H, P = 2, 32, 2, 4
+    r = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    logw = jnp.asarray(-rng.uniform(1e-4, 0.5, size=(B, S, H, P)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, P)), jnp.float32)
+    y, st = wkv6_chunked(r, k, v, logw, u, chunk=8)
+    y_ref, st_ref = _wkv6_sequential(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(y), y_ref, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), st_ref, atol=1e-4, rtol=1e-4)

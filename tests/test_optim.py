@@ -1,0 +1,31 @@
+"""Optimizer + schedule + clipping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optim import OptConfig, adamw_update, clip_by_global_norm, init_opt_state, schedule
+
+
+def test_adamw_minimizes_quadratic():
+    oc = OptConfig(lr=0.1, weight_decay=0.0, warmup_steps=0, total_steps=200, clip_norm=10.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = init_opt_state(params)
+    for _ in range(150):
+        g = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(params, g, opt, oc)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.15
+
+
+def test_clip_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == 20.0
+    np.testing.assert_allclose(np.asarray(clipped["a"]), 0.5, rtol=1e-5)
+
+
+def test_schedule_shape():
+    oc = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    lrs = [float(schedule(oc, jnp.int32(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0  # warmup
+    assert lrs[99] < lrs[50] < lrs[11]  # cosine decay
+    assert lrs[99] >= 0.1 - 1e-6
