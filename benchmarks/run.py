@@ -30,6 +30,7 @@ TABLES = [
     ("table1_shortgen_absdiff", "tables", "table1_short_tasks"),
     ("fig5_measured_decode_speedup", "decode_bench", "measured_speedup"),
     ("fig5_analytic_byte_reduction", "decode_bench", "analytic_reductions"),
+    ("serve_continuous_latency_speedup", "serve_bench", "serve_throughput"),
 ]
 
 _WORKER = """

@@ -1,0 +1,23 @@
+"""Version-compat shims for jax API drift.
+
+The repo targets a range of jax releases: newer ones expose
+``jax.shard_map(..., check_vma=...)`` while older ones only have
+``jax.experimental.shard_map.shard_map(..., check_rep=...)``.  Keep every
+such fork here so model/serving code stays clean.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` with the replication-check flag mapped per version."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+    )

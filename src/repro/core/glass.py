@@ -60,11 +60,34 @@ def compute_global_prior(
     return importance.finalize(stats)
 
 
-def build_masks(local_stats: Dict, global_prior: jax.Array, gcfg: GlassConfig) -> MaskSet:
+def build_masks(
+    local_stats: Dict,
+    global_prior: jax.Array,
+    gcfg: GlassConfig,
+    *,
+    slot_axis: bool = False,
+) -> MaskSet:
     """Fuse prefill-local and global importance into the decode mask set.
 
     local_stats: {"sum_abs", "count"} from prefill; global_prior: (L, m).
-    lam = 0 -> GRIFFIN (local-only); lam = 1 -> static global mask."""
+    lam = 0 -> GRIFFIN (local-only); lam = 1 -> static global mask.
+
+    ``slot_axis=True`` builds per-request masks for continuous batching:
+    local_stats leaves are stacked over a leading request axis (one prefill
+    per request), the prior stays shared, and the result uses the decode-scan
+    layout with the slot axis second — idx (L, B, k), mask (L, B, m) (MoE
+    adds the expert axis after B; hybrid keeps its leading singleton)."""
+    if slot_axis:
+        def one(st):
+            ms = build_masks(st, global_prior, gcfg)
+            return ms.idx, ms.mask, ms.scores
+
+        idx, mask, scores = jax.vmap(one)(local_stats)
+        return MaskSet(
+            idx=jnp.moveaxis(idx, 0, 1),
+            mask=jnp.moveaxis(mask, 0, 1),
+            scores=jnp.moveaxis(scores, 0, 1),
+        )
     local = importance.finalize(local_stats)
     if local.ndim == 1:  # hybrid shared block: single (m,) signal
         local = local[None]
@@ -78,14 +101,24 @@ def compact_params(model: Model, params, idx: jax.Array):
     """One-time gather of selected units into compact decode weights.
 
     Returns the ``compact_layers`` pytree accepted by ``model.decode_step``
-    (stacked over layers, matching the scan layout)."""
+    (stacked over layers, matching the scan layout).
+
+    Slot-stacked idx from ``build_masks(..., slot_axis=True)`` — one extra
+    axis after L (dense/ssm (L, B, k), MoE (L, B, E, k), hybrid (1, B, k)) —
+    yields per-slot compact weights with the same extra axis after L, the
+    layout the decode steps accept for continuous batching."""
     cfg = model.cfg
+
+    def per_layer(one, base_ndim: int):
+        fn = one
+        if idx.ndim - 1 > base_ndim:  # slot axis rides between L and the gather dims
+            fn = jax.vmap(one, in_axes=(None, 0))
+        return jax.vmap(fn)
+
     if cfg.is_encoder_decoder:
-        return jax.vmap(lambda p, i: compact_ffn_params(p, i))(
-            params["dec_layers"]["ffn"], idx
-        )
+        return per_layer(compact_ffn_params, 1)(params["dec_layers"]["ffn"], idx)
     if cfg.family == "moe":
-        return jax.vmap(lambda p, i: compact_moe_params(p, i))(
+        return per_layer(compact_moe_params, 2)(
             {k: params["layers"]["moe"][k] for k in params["layers"]["moe"]}, idx
         )
     if cfg.family == "ssm":
@@ -99,11 +132,15 @@ def compact_params(model: Model, params, idx: jax.Array):
                 "wv": jnp.take(p["wv"], i, axis=0),
             }
 
-        return jax.vmap(one)(cm, idx)
+        return per_layer(one, 1)(cm, idx)
     if cfg.family == "hybrid":
-        i = idx[0] if idx.ndim > 1 else idx
+        i = idx[0] if idx.ndim > 1 else idx  # drop the shared-block L=1 axis
+        if i.ndim == 2:  # per-slot (B, k)
+            return jax.vmap(compact_ffn_params, in_axes=(None, 0))(
+                params["shared_attn"]["ffn"], i
+            )
         return compact_ffn_params(params["shared_attn"]["ffn"], i)
-    return jax.vmap(lambda p, i: compact_ffn_params(p, i))(params["layers"]["ffn"], idx)
+    return per_layer(compact_ffn_params, 1)(params["layers"]["ffn"], idx)
 
 
 def glass_pipeline_masks(

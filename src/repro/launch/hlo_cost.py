@@ -237,7 +237,12 @@ class HloCostModel:
     # -- per-instruction costs -------------------------------------------
 
     def _operand_shape(self, ref: str) -> str:
-        name = ref.strip().lstrip("%").split(" ")[0]
+        ref = ref.strip()
+        # Typed operand syntax carries the shape inline ("bf16[4,256]{1,0} %x");
+        # untyped syntax ("%x") needs the definition-site lookup.
+        if not ref.startswith("%") and _SHAPE_RE.search(ref):
+            return ref
+        name = ref.lstrip("%").split(" ")[0]
         return self.shapes.get(name, "")
 
     def _dot_flops(self, inst: Instruction) -> float:

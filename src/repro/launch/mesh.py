@@ -9,19 +9,28 @@ from __future__ import annotations
 import jax
 
 
+def _make_auto_mesh(shape, axes):
+    """Version-compat mesh constructor.
+
+    ``jax.sharding.AxisType`` only exists on newer jax; older releases build
+    Auto-typed meshes by default, so simply omit the kwarg there."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips when multi_pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return _make_auto_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over host/CPU devices for tests (requires
     XLA_FLAGS=--xla_force_host_platform_device_count set by the caller)."""
-    auto = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=auto)
+    return _make_auto_mesh((data, model), ("data", "model"))
 
 
 def dp_axes(mesh) -> tuple:

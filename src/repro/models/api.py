@@ -96,10 +96,10 @@ class Model:
         params,
         token: jax.Array,  # (B, 1)
         cache,
-        cache_len: jax.Array,
+        cache_len: jax.Array,  # scalar, or (B,) per-slot lengths (continuous batching)
         *,
-        ffn_masks=None,
-        compact_layers=None,
+        ffn_masks=None,  # shared (L, m), or per-slot with an extra B axis after L
+        compact_layers=None,  # compact FFN pytree; per-slot adds a B axis after L
     ):
         cfg = self.cfg
         if cfg.is_encoder_decoder:
@@ -111,7 +111,12 @@ class Model:
                 params, token, cache, cache_len, cfg, ffn_masks=ffn_masks, compact_layers=compact_layers
             )
         if cfg.family == "hybrid":
-            mask = ffn_masks[0] if (ffn_masks is not None and ffn_masks.ndim > 1) else ffn_masks
+            # mask layouts are rank-distinguished (never shape-sniffed):
+            # (m,) shared | (1, m) MaskSet layout -> shared | (1, B, m)
+            # per-slot arena -> (B, m)
+            mask = ffn_masks
+            if mask is not None and mask.ndim > 1:
+                mask = mask[0]
             return transformer.hybrid_decode_step(
                 params, token, cache, cache_len, cfg, shared_mask=mask, shared_compact=compact_layers
             )

@@ -103,7 +103,7 @@ def causal_window_mask(
     q_pos: jax.Array,  # (B, Sq) int32
     kv_pos: jax.Array,  # (Skv,) int32
     window,  # traced scalar or python int; None => no window
-    kv_len=None,  # traced scalar: only positions < kv_len are valid (decode)
+    kv_len=None,  # traced scalar or (B,): only positions < kv_len are valid
     causal: bool = True,
 ) -> jax.Array:
     """Boolean mask (B, 1, 1, Sq, Skv): True = attend."""
@@ -115,6 +115,9 @@ def causal_window_mask(
     if window is not None:
         mask = mask & ((qp - kp) < window)
     if kv_len is not None:
+        kv_len = jnp.asarray(kv_len)
+        if kv_len.ndim:  # per-slot lengths (continuous batching)
+            kv_len = kv_len[:, None, None, None, None]
         mask = mask & (kp < kv_len)
     return mask
 
@@ -208,14 +211,18 @@ def attention_decode(
     *,
     cache_k: jax.Array,  # (B, S_max, K, hd)
     cache_v: jax.Array,
-    cache_len: jax.Array,  # scalar int32: tokens already in cache
+    cache_len: jax.Array,  # int32 tokens already in cache: scalar, or (B,) per-slot
     window=None,
 ):
     """One decode step: append token's k/v, attend over valid prefix."""
     B, _, _ = x.shape
     S_max = cache_k.shape[1]
     q, k, v = _project_qkv(p, x, cfg)
-    pos = jnp.broadcast_to(cache_len.astype(jnp.int32)[None, None], (B, 1))
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    if cache_len.ndim:
+        pos = cache_len[:, None]
+    else:
+        pos = jnp.broadcast_to(cache_len[None, None], (B, 1))
     if cfg.rope_type == "mrope":
         rp = jnp.broadcast_to(pos[None], (3, B, 1))
     else:
@@ -229,12 +236,17 @@ def attention_decode(
         # replicate the sequence-sharded cache (involuntary full remat).
         B_, S_, H_, hd_ = q.shape
         q = q.reshape(B_, S_, cfg.n_kv_heads, cfg.q_per_kv, hd_)
-    cache_k = constrain(
-        jax.lax.dynamic_update_slice_in_dim(cache_k, k, cache_len, axis=1), "decode_cache"
-    )
-    cache_v = constrain(
-        jax.lax.dynamic_update_slice_in_dim(cache_v, v, cache_len, axis=1), "decode_cache"
-    )
+    if cache_len.ndim:  # scatter each slot's k/v at its own write offset
+        rows = jnp.arange(B)
+        cache_k = constrain(cache_k.at[rows, cache_len].set(k[:, 0]), "decode_cache")
+        cache_v = constrain(cache_v.at[rows, cache_len].set(v[:, 0]), "decode_cache")
+    else:
+        cache_k = constrain(
+            jax.lax.dynamic_update_slice_in_dim(cache_k, k, cache_len, axis=1), "decode_cache"
+        )
+        cache_v = constrain(
+            jax.lax.dynamic_update_slice_in_dim(cache_v, v, cache_len, axis=1), "decode_cache"
+        )
     kvpos = jnp.arange(S_max, dtype=jnp.int32)
     mask = causal_window_mask(pos, kvpos, window, kv_len=cache_len + 1)
     out = _attend(q, cache_k, cache_v, cfg, mask)

@@ -75,8 +75,16 @@ def router_topk(p, x, cfg: ModelConfig):
 
 
 def _expert_hidden(p, xe, cfg: ModelConfig):
-    """xe (E, ..., d) -> h (E, ..., f), batched over the expert dim."""
+    """xe (E, ..., d) -> h (E, ..., f), batched over the expert dim.
+
+    Per-slot compact weights (continuous batching) carry a leading slot axis
+    aligned with xe's batch axis: w (B, E, d, k), xe (E, B, S, d)."""
     act = activation(cfg.ffn_act)
+    if p["w_up"].ndim == 4:
+        up = jnp.einsum("ebsd,bedf->ebsf", xe, p["w_up"])
+        if "w_gate" in p:
+            return act(jnp.einsum("ebsd,bedf->ebsf", xe, p["w_gate"])) * up
+        return act(up)
     up = jnp.einsum("e...d,edf->e...f", xe, p["w_up"])
     if "w_gate" in p:
         return act(jnp.einsum("e...d,edf->e...f", xe, p["w_gate"])) * up
@@ -112,8 +120,14 @@ def moe_dense(
             "count": jnp.sum(routed_e.reshape(E, -1), axis=1),
         }
     if mask is not None:
-        h = h * mask[:, None, None, :].astype(h.dtype)
-    ye = jnp.einsum("ebsf,efd->ebsd", h, p["w_down"])
+        if mask.ndim == 3:  # per-slot (B, E, f)
+            h = h * jnp.moveaxis(mask, 0, 1)[:, :, None, :].astype(h.dtype)
+        else:  # shared (E, f)
+            h = h * mask[:, None, None, :].astype(h.dtype)
+    if p["w_down"].ndim == 4:  # per-slot compact (B, E, k, d)
+        ye = jnp.einsum("ebsf,befd->ebsd", h, p["w_down"])
+    else:
+        ye = jnp.einsum("ebsf,efd->ebsd", h, p["w_down"])
     y = jnp.einsum("ebsd,bse->bsd", ye, comb.astype(ye.dtype))
     return y, aux, stats
 
@@ -171,8 +185,14 @@ def moe_dropping(
                 "count": jnp.sum(occupied, axis=(1, 2)),
             }
         if mask is not None:
-            h = h * mask[:, None, None, :].astype(h.dtype)
-        ye = jnp.einsum("EbCf,Efd->EbCd", h, p["w_down"])
+            if mask.ndim == 3:  # per-slot (B, E, f)
+                h = h * jnp.moveaxis(mask, 0, 1)[:, :, None, :].astype(h.dtype)
+            else:
+                h = h * mask[:, None, None, :].astype(h.dtype)
+        if p["w_down"].ndim == 4:  # per-slot compact (B, E, k, d)
+            ye = jnp.einsum("EbCf,bEfd->EbCd", h, p["w_down"])
+        else:
+            ye = jnp.einsum("EbCf,Efd->EbCd", h, p["w_down"])
         y = jnp.einsum("EbCd,bcEC->bcd", ye, combw.astype(ye.dtype))
         return carry, (y, aux, st)
 

@@ -225,8 +225,12 @@ def channel_mix_forward(
 
     xs, new_shift = _shift(x, shift_prev)
     mu = p["mu"].astype(x.dtype)
-    xk = x + (xs - x) * mu[0]
-    xr = x + (xs - x) * mu[1]
+    if mu.ndim == 3:  # per-slot compact stack (B, 2, d) — continuous batching
+        mu_k, mu_r = mu[:, 0:1], mu[:, 1:2]  # (B, 1, d)
+    else:
+        mu_k, mu_r = mu[0], mu[1]
+    xk = x + (xs - x) * mu_k
+    xr = x + (xs - x) * mu_r
     h = jnp.square(jax.nn.relu(xk @ p["wk"]))
     if probe is not None:
         h = h * (1.0 + probe.astype(h.dtype))

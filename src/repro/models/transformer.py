@@ -314,11 +314,12 @@ def dense_decode_step(
     params,
     token,  # (B, 1) int32
     cache,  # {"k","v": (L,B,Smax,K,hd)}
-    cache_len,  # scalar int32
+    cache_len,  # int32: scalar, or (B,) per-slot lengths (continuous batching)
     cfg: ModelConfig,
     *,
-    ffn_masks=None,
-    compact_layers=None,  # stacked compact FFN params (L-leading) replacing lp["ffn"]
+    ffn_masks=None,  # (L, m) shared, or (L, B, m) per-slot; MoE adds an E axis
+    compact_layers=None,  # stacked compact FFN params (L-leading) replacing lp["ffn"];
+    # per-slot serving stacks an extra slot axis after L, e.g. w_up (L, B, d, k)
 ):
     """One decode step across all layers (scan). Returns (logits, new_cache)."""
     x = embed_tokens(params, token, cfg)
@@ -340,6 +341,8 @@ def dense_decode_step(
             y, _, _ = moe_forward(mp, h2, cfg, mask=mask_l)
         else:
             fp = comp_l if comp_l is not None else lp["ffn"]
+            if mask_l is not None and mask_l.ndim == 2:  # per-slot (B, m)
+                mask_l = mask_l[:, None, :]
             y = ffn_forward(fp, h2, cfg, mask=mask_l)
         if cfg.sandwich_norms:
             y = rms_norm(y, lp["ln2_post"], cfg.norm_eps, True)
@@ -436,6 +439,8 @@ def rwkv_decode_step(params, token, cache, cache_len, cfg: ModelConfig, *, ffn_m
         x = x + y
         h2 = layer_norm(x, lp["ln2_w"], lp["ln2_b"], cfg.norm_eps)
         cm = comp_l if have_comp else lp["cm"]
+        if have_mask and mask_l.ndim == 2:  # per-slot (B, m)
+            mask_l = mask_l[:, None, :]
         y2, sh_cm, _ = rk.channel_mix_forward(
             cm, h2, cfg, shift_prev=sh_cm, mask=mask_l if have_mask else None
         )
@@ -565,8 +570,8 @@ def hybrid_decode_step(
     n_groups, g, n_tail = hybrid_layout(cfg)
     x = embed_tokens(params, token, cfg)
     sp = params["shared_attn"]
-    B = token.shape[0]
-    pos = jnp.broadcast_to(cache_len.astype(jnp.int32)[None, None], (B, 1))
+    if shared_mask is not None and shared_mask.ndim == 2:  # per-slot (B, m)
+        shared_mask = shared_mask[:, None, :]
 
     def mamba_step(x, lp, ssm, conv):
         h = rms_norm(x, lp["ln"], cfg.norm_eps)

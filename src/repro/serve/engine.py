@@ -1,10 +1,25 @@
-"""Batched serving engine with first-class GLASS integration.
+"""Serving engines with first-class GLASS integration.
 
-Request lifecycle (paper Fig. 2 right):
+Two engines share the same model API and GLASS pipeline:
 
-  1. prefill the (padded) prompt batch, collecting local activation stats;
+``Engine`` — static batch (the original demo path): every request arrives
+together, shares one prompt padding, and finishes together; masks are built
+once for the whole batch.
+
+``ContinuousEngine`` — continuous batching (the production path): a
+``Scheduler`` queues requests, a ``KVPool`` holds a fixed slot arena, and
+each request owns *per-slot* GLASS state — its own prefill-local stats,
+fused mask, and compact-or-masked FFN weights, exactly the paper's
+per-prompt dynamic selection.  Prefill is interleaved with ongoing decode;
+finished sequences are evicted and their slots reused without recompiling
+(decode is one jitted step over the full arena, per-slot lengths mask the
+frontier).
+
+Request lifecycle (paper Fig. 2 right), per slot in the continuous case:
+
+  1. prefill the prompt, collecting local activation stats;
   2. fuse local stats with the offline global prior -> per-layer masks;
-  3. gather compact FFN weights once;
+  3. gather compact FFN weights once, into the slot's row;
   4. steady-state decode with the compact weights (density * FLOPs/bytes).
 
 ``glass=None`` serves dense.  ``mode="masked"`` keeps full weights and
@@ -24,7 +39,9 @@ import numpy as np
 from ..core.fusion import GlassConfig
 from ..core.glass import build_masks, compact_params
 from ..models.api import Model
+from .kv_pool import KVPool, clear_slot_leaf
 from .sampling import sample
+from .scheduler import FinishedRequest, Request, Scheduler
 
 
 @dataclass
@@ -49,8 +66,49 @@ class Engine:
         self.glass = glass
         self.prior = global_prior
         self.glass_mode = glass_mode
+        # jitted callables keyed by static call signature: repeated generate()
+        # calls with the same shapes must NOT re-trace (masks/compact weights
+        # are traced arguments, so per-request GLASS state reuses the cache)
+        self._jits: Dict[tuple, object] = {}
         if glass is not None:
             assert global_prior is not None, "GLASS needs the offline prior"
+
+    def _prefill_fn(self, B: int, S: int, max_len: int):
+        key = ("prefill", B, S, max_len)
+        if key not in self._jits:
+            model = self.model
+            self._jits[key] = jax.jit(lambda p, t: model.prefill(p, {"tokens": t}, max_len))
+        return self._jits[key]
+
+    def _decode_fn(self, B: int, S: int, max_new: int, temperature: float, top_k: int,
+                   return_logits: bool):
+        key = ("decode", B, S, max_new, temperature, top_k, return_logits)
+        if key not in self._jits:
+            model = self.model
+
+            def pick(r, lg):
+                if temperature <= 0.0:
+                    return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                return sample(r, lg, temperature=temperature, top_k=top_k).astype(jnp.int32)
+
+            def decode_loop(params, cache, first_tok, rng, ffn_masks, compact):
+                def body(carry, i):
+                    cache, tok, rng = carry
+                    rng, krng = jax.random.split(rng)
+                    lg, cache = model.decode_step(
+                        params, tok[:, None], cache, S + i,
+                        ffn_masks=ffn_masks, compact_layers=compact,
+                    )
+                    nxt = pick(krng, lg[:, -1].astype(jnp.float32))
+                    return (cache, nxt, rng), (nxt, lg[:, -1] if return_logits else jnp.zeros((B, 0)))
+
+                (_, _, _), (toks, lgs) = jax.lax.scan(
+                    body, (cache, first_tok, rng), jnp.arange(max_new, dtype=jnp.int32)
+                )
+                return toks.T, jnp.swapaxes(lgs, 0, 1)
+
+            self._jits[key] = jax.jit(decode_loop)
+        return self._jits[key]
 
     def generate(
         self,
@@ -64,9 +122,7 @@ class Engine:
     ) -> GenerationResult:
         model, params = self.model, self.params
         B, S = prompts.shape
-        logits, cache, stats = jax.jit(
-            lambda p, t: model.prefill(p, {"tokens": t}, S + max_new)
-        )(params, prompts)
+        logits, cache, stats = self._prefill_fn(B, S, S + max_new)(params, prompts)
 
         masks = None
         compact = None
@@ -79,35 +135,314 @@ class Engine:
                 ffn_masks = masks.mask
 
         rng = rng if rng is not None else jax.random.key(0)
-
-        def pick(r, lg):
-            if temperature <= 0.0:
-                return jnp.argmax(lg, axis=-1).astype(jnp.int32)
-            return sample(r, lg, temperature=temperature, top_k=top_k).astype(jnp.int32)
-
-        @jax.jit
-        def decode_loop(params, cache, first_tok, rng):
-            def body(carry, i):
-                cache, tok, rng = carry
-                rng, krng = jax.random.split(rng)
-                lg, cache = model.decode_step(
-                    params, tok[:, None], cache, S + i,
-                    ffn_masks=ffn_masks, compact_layers=compact,
-                )
-                nxt = pick(krng, lg[:, -1].astype(jnp.float32))
-                return (cache, nxt, rng), (nxt, lg[:, -1] if return_logits else jnp.zeros((B, 0)))
-
-            (_, _, _), (toks, lgs) = jax.lax.scan(
-                body, (cache, first_tok, rng), jnp.arange(max_new, dtype=jnp.int32)
-            )
-            return toks.T, jnp.swapaxes(lgs, 0, 1)
-
         rng, krng = jax.random.split(rng)
-        first = pick(krng, logits[:, -1].astype(jnp.float32))
-        toks, lgs = decode_loop(params, cache, first, rng)
+        if temperature <= 0.0:
+            first = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1).astype(jnp.int32)
+        else:
+            first = sample(krng, logits[:, -1].astype(jnp.float32),
+                           temperature=temperature, top_k=top_k).astype(jnp.int32)
+        decode_loop = self._decode_fn(B, S, max_new, temperature, top_k, return_logits)
+        toks, lgs = decode_loop(params, cache, first, rng, ffn_masks, compact)
         out_tokens = np.asarray(jnp.concatenate([first[:, None], toks[:, :-1]], axis=1))
         return GenerationResult(
             tokens=out_tokens,
             logits_seq=np.asarray(lgs) if return_logits else None,
             masks=masks,
         )
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+
+class GlassSlotState:
+    """Per-slot GLASS state arenas for the continuous engine.
+
+    ``masked`` keeps a float mask arena ((L, max_slots, m); MoE adds the
+    expert axis, the hybrid shared block drops L).  ``compact`` keeps the
+    per-slot stacked compact-weight pytree from ``compact_params`` with the
+    slot axis sized ``max_slots``.  Arenas are created lazily on the first
+    admission (that fixes every shape) and rows are overwritten/zeroed as
+    slots turn over.  Multiple admissions in one step are fused into a
+    single ``build_masks(..., slot_axis=True)`` + ``compact_params`` call.
+    """
+
+    def __init__(self, model: Model, params, gcfg: GlassConfig, prior, mode: str, max_slots: int):
+        if mode not in ("masked", "compact"):
+            raise ValueError(mode)
+        self.model = model
+        self.params = params
+        self.gcfg = gcfg
+        self.prior = prior
+        self.mode = mode
+        self.max_slots = max_slots
+        # slot axis in both the stacked rows and the arena: after the leading
+        # L axis everywhere except hybrid compact weights (no L axis at all)
+        self.slot_axis = 0 if (model.cfg.family == "hybrid" and mode == "compact") else 1
+        self.arena = None
+        ax = self.slot_axis
+
+        def write(arena, rows, slots):
+            # one scatter for ALL slots admitted this tick (slots (B,) int32)
+            def one(a, r):
+                r = r.astype(a.dtype)
+                return a.at[slots].set(r) if ax == 0 else a.at[:, slots].set(r)
+
+            return jax.tree.map(one, arena, rows)
+
+        def clear(arena, slot):
+            return jax.tree.map(lambda a: clear_slot_leaf(a, ax, slot), arena)
+
+        def rows(params, prior, stacked):
+            ms = build_masks(stacked, prior, gcfg, slot_axis=True)
+            if mode == "masked":
+                # hybrid keeps the (1, B, m) MaskSet layout: rank (not shape)
+                # distinguishes per-slot from the legacy shared (1, m) mask
+                return ms.mask  # (L, B, m) / (L, B, E, f) / hybrid (1, B, m)
+            return compact_params(model, params, ms.idx)
+
+        # jitted like KVPool's writers: admission-path mask fusion and
+        # compaction, and slot writes/clears, must not dispatch eagerly; the
+        # arena argument is dead after each call, so donate it
+        self._rows = jax.jit(rows)
+        self._write = jax.jit(write, donate_argnums=(0,))
+        self._clear = jax.jit(clear, donate_argnums=(0,))
+
+    def admit(self, slots: List[int], stats_list) -> None:
+        ax = self.slot_axis
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *stats_list)
+        rows = self._rows(self.params, self.prior, stacked)
+        if self.arena is None:
+            self.arena = jax.tree.map(
+                lambda r: jnp.zeros(r.shape[:ax] + (self.max_slots,) + r.shape[ax + 1 :], r.dtype),
+                rows,
+            )
+        self.arena = self._write(self.arena, rows, jnp.asarray(slots, jnp.int32))
+
+    def clear(self, slot: int) -> None:
+        """Zero the slot's row.  A zero mask / zero compact gather makes the
+        FFN contribution of an inactive slot exactly zero — cheap hygiene on
+        top of the engine never reading inactive slots' logits."""
+        if self.arena is None:
+            return
+        self.arena = self._clear(self.arena, jnp.int32(slot))
+
+
+class ContinuousEngine:
+    """Continuous-batching server: admit-as-slots-free, decode over a fixed
+    arena, evict on completion.
+
+    Greedy by default (``temperature=0``); with a temperature the sampled
+    stream is deterministic given ``rng`` but not token-compatible with the
+    static ``Engine`` (different rng consumption order).
+    """
+
+    def __init__(
+        self,
+        model: Model,
+        params,
+        *,
+        max_slots: int = 8,
+        max_len: int = 256,
+        glass: Optional[GlassConfig] = None,
+        global_prior=None,
+        glass_mode: str = "compact",  # compact | masked
+        temperature: float = 0.0,
+        top_k: int = 0,
+        rng: Optional[jax.Array] = None,
+        decode_chunk: int = 8,  # max ticks fused into one jitted scan
+    ):
+        if glass is not None:
+            assert global_prior is not None, "GLASS needs the offline prior"
+        if model.cfg.is_encoder_decoder:
+            raise NotImplementedError("continuous batching targets decoder LMs")
+        self.model = model
+        self.params = params
+        self.temperature = temperature
+        self.top_k = top_k
+        self.pool = KVPool(model, max_slots, max_len)
+        self.scheduler = Scheduler(max_len)
+        self.glass_slots = (
+            GlassSlotState(model, params, glass, global_prior, glass_mode, max_slots)
+            if glass is not None
+            else None
+        )
+        self.pending = np.zeros((max_slots,), np.int32)  # next token to feed, per slot
+        self.outputs: List[Optional[List[int]]] = [None] * max_slots
+        self.live: List[Optional[Request]] = [None] * max_slots
+        self.admitted_step = [0] * max_slots
+        self.t = 0  # engine step counter == decode ticks
+        self.slot_steps = 0  # decode ticks x active slots (scheduling telemetry)
+        self._rng = rng if rng is not None else jax.random.key(0)
+
+        # prefill at the request's exact length (jit caches per length); the
+        # cache is sized to the prompt so the pool insert stays minimal
+        self._prefill = jax.jit(lambda pr, tk: model.prefill(pr, {"tokens": tk}, tk.shape[1]))
+
+        mode = self.glass_slots.mode if self.glass_slots is not None else None
+        # fused-decode horizon: whenever the scheduler can prove no admission
+        # or eviction can happen for H ticks, H decode steps run as ONE jitted
+        # scan — the host round-trip (the dominant per-token cost at small
+        # scale) is paid once per chunk instead of once per token.  H is
+        # bucketed to powers of two so at most log2(chunk)+1 variants compile.
+        self.decode_chunk = max(1, decode_chunk)
+
+        def dec(pr, cache, lengths, toks, extra, rng, H):
+            kw = {}
+            if mode == "masked":
+                kw["ffn_masks"] = extra
+            elif mode == "compact":
+                kw["compact_layers"] = extra
+
+            def body(carry, _):
+                cache, lengths, toks, rng = carry
+                lg, cache = model.decode_step(pr, toks[:, None], cache, lengths, **kw)
+                lg = lg[:, -1].astype(jnp.float32)
+                rng, krng = jax.random.split(rng)
+                if temperature > 0.0:
+                    nxt = sample(krng, lg, temperature=temperature, top_k=top_k)
+                else:
+                    nxt = jnp.argmax(lg, axis=-1)
+                nxt = nxt.astype(jnp.int32)
+                return (cache, lengths + 1, nxt, rng), nxt
+
+            (cache, _, _, rng), seq = jax.lax.scan(
+                body, (cache, lengths, toks, rng), None, length=H
+            )
+            return seq, cache, rng  # seq (H, B)
+
+        # the arena is dead after each chunk — donate it so XLA updates the
+        # KV cache in place instead of copying max_slots * max_len every tick
+        self._decode = jax.jit(dec, static_argnums=(6,), donate_argnums=(1,))
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.scheduler.submit(req)
+
+    @property
+    def n_active(self) -> int:
+        return int(self.pool.active.sum())
+
+    def _horizon(self) -> int:
+        """Largest safe fused-decode length: bounded by the first possible
+        eviction (min remaining tokens of any active slot) and — when a free
+        slot could accept it — the next queued arrival.  Bucketed to a power
+        of two so the chunked decode compiles O(log chunk) variants."""
+        active = np.nonzero(self.pool.active)[0]
+        h = min(self.live[int(s)].max_new - len(self.outputs[int(s)]) for s in active)
+        if self.pool.n_free and len(self.scheduler):
+            na = self.scheduler.next_arrival()
+            if na is not None:  # all remaining arrivals are in the future
+                h = min(h, na - self.t)
+        h = min(h, self.decode_chunk)
+        p = 1
+        while p * 2 <= h:
+            p *= 2
+        return p
+
+    def step(self) -> List[FinishedRequest]:
+        """One engine tick group: admit arrived requests into free slots
+        (prefill interleaved with decode), then decode the largest provably
+        safe chunk of tokens for every active slot.  Returns requests
+        finished in this group."""
+        finished: List[FinishedRequest] = []
+        reqs = self.scheduler.pop_admissible(self.t, self.pool.n_free)
+        if reqs:
+            self._admit(reqs, finished)
+        if self.pool.active.any():
+            H = self._horizon()
+            extra = self.glass_slots.arena if self.glass_slots is not None else None
+            seq, cache, self._rng = self._decode(
+                self.params,
+                self.pool.cache,
+                jnp.asarray(self.pool.lengths),
+                jnp.asarray(self.pending),
+                extra,
+                self._rng,
+                H,
+            )
+            self.pool.cache = cache
+            seq = np.asarray(seq)  # (H, B)
+            self.slot_steps += H * int(self.pool.active.sum())
+            for s in np.nonzero(self.pool.active)[0]:
+                s = int(s)
+                self.pool.lengths[s] += H
+                self.outputs[s].extend(int(x) for x in seq[:, s])
+                self.pending[s] = seq[-1, s]
+                if len(self.outputs[s]) >= self.live[s].max_new:
+                    self._finish(s, finished)
+            self.t += H
+        else:
+            na = self.scheduler.next_arrival()
+            # idle: fast-forward to the next arrival instead of spinning
+            self.t = max(self.t + 1, na if na is not None else self.t + 1)
+        return finished
+
+    def run(self, requests=(), max_steps: Optional[int] = None) -> Dict[int, FinishedRequest]:
+        """Serve until queue and slots drain; returns {uid: FinishedRequest}."""
+        for r in requests:
+            self.scheduler.submit(r)
+        if max_steps is None:
+            queued = list(self.scheduler.queue)
+            budget = sum(r.max_new for r in queued)
+            budget += sum(r.max_new for r in self.live if r is not None)
+            arrivals = [r.arrival for r in queued] + [0]
+            max_steps = self.t + max(arrivals) + budget + len(queued) + self.pool.max_slots + 8
+        done: Dict[int, FinishedRequest] = {}
+        while len(self.scheduler) or self.pool.active.any():
+            if self.t > max_steps:
+                raise RuntimeError(f"continuous engine did not drain in {max_steps} steps")
+            for f in self.step():
+                done[f.uid] = f
+        return done
+
+    # -- internals ----------------------------------------------------------
+
+    def _first_token(self, logits_last: np.ndarray) -> int:
+        if self.temperature <= 0.0:
+            return int(np.argmax(logits_last))
+        self._rng, krng = jax.random.split(self._rng)
+        return int(
+            sample(krng, jnp.asarray(logits_last)[None], temperature=self.temperature, top_k=self.top_k)[0]
+        )
+
+    def _admit(self, reqs: List[Request], finished: List[FinishedRequest]) -> None:
+        slots, stats_list = [], []
+        for r in reqs:
+            slot = self.pool.alloc()
+            toks = jnp.asarray(np.asarray(r.prompt, np.int32))[None]
+            logits, cache, stats = self._prefill(self.params, toks)
+            first = self._first_token(np.asarray(logits[0, -1], np.float32))
+            self.pool.write_prefill(slot, cache, len(r.prompt))
+            self.pending[slot] = first
+            self.outputs[slot] = [first]
+            self.live[slot] = r
+            self.admitted_step[slot] = self.t
+            slots.append(slot)
+            stats_list.append(stats)
+        if self.glass_slots is not None:
+            self.glass_slots.admit(slots, stats_list)
+        for slot in slots:  # max_new == 1 completes without a decode tick
+            if len(self.outputs[slot]) >= self.live[slot].max_new:
+                self._finish(slot, finished)
+
+    def _finish(self, slot: int, finished: List[FinishedRequest]) -> None:
+        r = self.live[slot]
+        finished.append(
+            FinishedRequest(
+                uid=r.uid,
+                prompt=np.asarray(r.prompt, np.int32),
+                tokens=np.asarray(self.outputs[slot], np.int32),
+                arrival=r.arrival,
+                admitted_step=self.admitted_step[slot],
+                finished_step=self.t,
+            )
+        )
+        self.pool.free(slot)
+        if self.glass_slots is not None:
+            self.glass_slots.clear(slot)
+        self.live[slot] = None
+        self.outputs[slot] = None
+        self.pending[slot] = 0

@@ -1,0 +1,110 @@
+"""Slot-based KV-cache pool for continuous batching.
+
+The pool owns ONE fixed cache arena allocated via ``model.init_cache``
+with batch = ``max_slots`` and sequence capacity = ``max_len``.  Each slot
+holds one in-flight request; decode always runs over the full arena, so the
+decode step compiles exactly once regardless of which requests come and go.
+Correctness across slots relies on two invariants:
+
+  * every attention read is masked by the slot's own length (``kv_len`` in
+    ``causal_window_mask``), so stale KV beyond a slot's frontier — from a
+    previous occupant or from the zero-init — is never attended;
+  * recurrent state (rwkv/mamba) is fully overwritten on admission and
+    zeroed on eviction, so state families cannot leak either.
+
+Admission inserts a freshly prefilled single-request cache (batch 1, length
+= the prompt length) into the slot's row.  The slot axis of every cache leaf
+is *discovered*, not hard-coded: we diff ``eval_shape`` of ``init_cache``
+for batch 1 vs batch 2, which keeps the pool family-agnostic (dense KV
+stacks, rwkv state tuples, hybrid mamba+KV mixtures) and robust to new
+cache layouts.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def slot_axes(model, max_len: int):
+    """Pytree (matching the cache structure) of each leaf's slot-axis index."""
+    c1 = jax.eval_shape(lambda: model.init_cache(1, max_len))
+    c2 = jax.eval_shape(lambda: model.init_cache(2, max_len))
+
+    def ax(a, b) -> int:
+        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+            if x != y:
+                return i
+        raise ValueError(f"no batch axis found in cache leaf {a.shape}")
+
+    return jax.tree.map(ax, c1, c2)
+
+
+def write_slot_leaf(dst: jax.Array, src: jax.Array, axis: int, slot) -> jax.Array:
+    """Write ``src`` (slot-axis size 1, other axes <= dst's) at ``slot``."""
+    starts = [jnp.int32(0)] * dst.ndim
+    starts[axis] = jnp.asarray(slot, jnp.int32)
+    return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), starts)
+
+
+def clear_slot_leaf(dst: jax.Array, axis: int, slot) -> jax.Array:
+    """Zero the size-1 row of ``dst`` at ``slot`` along ``axis``."""
+    shape = list(dst.shape)
+    shape[axis] = 1
+    return write_slot_leaf(dst, jnp.zeros(shape, dst.dtype), axis, slot)
+
+
+class KVPool:
+    """Fixed ``max_slots`` x ``max_len`` cache arena with per-slot lengths."""
+
+    def __init__(self, model, max_slots: int, max_len: int):
+        self.model = model
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.cache = model.init_cache(max_slots, max_len)
+        self.axes = slot_axes(model, max_len)
+        self.lengths = np.zeros((max_slots,), np.int32)
+        self.active = np.zeros((max_slots,), bool)
+        self._free: List[int] = list(range(max_slots))[::-1]  # pop() -> slot 0 first
+
+        def write(arena, req_cache, slot):
+            return jax.tree.map(
+                lambda dst, src, a: write_slot_leaf(dst, src, a, slot),
+                arena, req_cache, self.axes,
+            )
+
+        def clear(arena, slot):
+            return jax.tree.map(
+                lambda dst, a: clear_slot_leaf(dst, a, slot), arena, self.axes
+            )
+
+        # jitted so repeated admissions/evictions with the same request shape
+        # reuse the compiled scatter; the old arena is dead after each call,
+        # so donate it and update in place instead of copying the full cache
+        self._write = jax.jit(write, donate_argnums=(0,))
+        self._clear = jax.jit(clear, donate_argnums=(0,))
+
+    # -- slot lifecycle -----------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        return self._free.pop() if self._free else None
+
+    def write_prefill(self, slot: int, req_cache, length: int) -> None:
+        """Insert a single-request prefill cache (batch 1) into ``slot``."""
+        self.cache = self._write(self.cache, req_cache, jnp.int32(slot))
+        self.lengths[slot] = length
+        self.active[slot] = True
+
+    def free(self, slot: int) -> None:
+        """Evict: zero the slot's row (hygiene; masking is the correctness
+        mechanism) and return it to the free list."""
+        self.cache = self._clear(self.cache, jnp.int32(slot))
+        self.lengths[slot] = 0
+        self.active[slot] = False
+        self._free.append(slot)

@@ -1,0 +1,80 @@
+"""Request queue + admission policy for the continuous-batching engine.
+
+The scheduler is deliberately host-side and tiny: it tracks arrival times
+(in engine decode-step ticks), validates feasibility against the KV arena,
+and hands out admissible requests FIFO as slots free up.  Everything
+device-side (arena writes, decode) lives in ``engine.ContinuousEngine`` /
+``kv_pool.KVPool``.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32 token ids
+    max_new: int  # number of tokens to generate (incl. the first post-prefill token)
+    arrival: int = 0  # engine step at which the request becomes visible
+
+
+@dataclass
+class FinishedRequest:
+    uid: int
+    prompt: np.ndarray
+    tokens: np.ndarray  # (max_new,) generated ids
+    arrival: int
+    admitted_step: int
+    finished_step: int
+
+
+@dataclass
+class Scheduler:
+    """FIFO admission with an arena-feasibility check.
+
+    A request needs ``len(prompt) + max_new - 1`` cache rows (the last
+    sampled token is returned but never written back), so infeasible
+    requests are rejected at submit time instead of deadlocking the queue.
+    """
+
+    max_len: int
+    queue: Deque[Request] = field(default_factory=deque)
+
+    def submit(self, req: Request) -> None:
+        need = len(req.prompt) + req.max_new - 1
+        if req.max_new < 1:
+            raise ValueError(f"request {req.uid}: max_new must be >= 1")
+        if need > self.max_len:
+            raise ValueError(
+                f"request {req.uid} needs {need} cache rows > max_len={self.max_len}"
+            )
+        self.queue.append(req)
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    def next_arrival(self) -> Optional[int]:
+        return min((r.arrival for r in self.queue), default=None)
+
+    def pop_admissible(self, now: int, k: int) -> List[Request]:
+        """Up to ``k`` arrived requests, FIFO by submission order.
+
+        Not-yet-arrived requests are skipped, not head-of-line blocking:
+        arrivals are wall-clock facts, not priorities."""
+        out: List[Request] = []
+        if k <= 0:
+            return out
+        rest: Deque[Request] = deque()
+        while self.queue:
+            r = self.queue.popleft()
+            if len(out) < k and r.arrival <= now:
+                out.append(r)
+            else:
+                rest.append(r)
+        self.queue = rest
+        return out

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from ..models.common import ModelConfig
 
 
@@ -66,7 +67,7 @@ def compact_ffn_sharded(
     out_specs = {"w_up": P(None, None, "model"), "w_down": P(None, "model", None)}
     if has_gate:
         out_specs["w_gate"] = P(None, None, "model")
-    fn = jax.shard_map(
+    fn = shard_map(
         kernel, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
     )
     return fn(
@@ -101,7 +102,7 @@ def compact_moe_sharded(mesh: Mesh, moe_params, idx_local):
     out_specs = {"router": P(None, None, None), "w_up": ep, "w_down": dn}
     if has_gate:
         out_specs["w_gate"] = ep
-    fn = jax.shard_map(kernel, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    fn = shard_map(kernel, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
     return fn(
         moe_params["w_up"],
         moe_params["w_down"],
@@ -121,7 +122,7 @@ def compact_rwkv_cm_sharded(mesh: Mesh, cm_params, idx_local):
             "wv": jax.vmap(_gather_rows)(wv, il),
         }
 
-    fn = jax.shard_map(
+    fn = shard_map(
         kernel,
         mesh=mesh,
         in_specs=(P(None, None, "model"), P(None, "model", None), P(None, "model", None)),

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from .optim import OptConfig, adamw_update
 
 
@@ -71,7 +72,7 @@ def make_dp_train_step(
             loss = jax.lax.pmean(loss, axis)
             return new_params, new_opt, residual, {**metrics, "loss": loss}
 
-        fn = jax.shard_map(
+        fn = shard_map(
             inner,
             mesh=mesh,
             in_specs=(P(), P(), P(), P(axis)),

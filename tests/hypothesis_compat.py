@@ -1,0 +1,132 @@
+"""Optional-``hypothesis`` shim for the property-style tests.
+
+When the real library is installed (see requirements-dev.txt) this module
+re-exports it untouched, so CI runs the full randomized search.  On a clean
+environment without ``hypothesis`` it falls back to a tiny deterministic
+generator: each ``@given`` test runs a fixed number of seeded pseudo-random
+examples.  That keeps ``pytest -q`` collecting (and meaningfully exercising)
+every module with zero extra dependencies.
+
+The fallback implements only the strategy surface used in this repo:
+``floats`` (+ ``.filter``/``.map``), ``lists`` (min/max_size, unique),
+``integers``, ``sampled_from``, ``booleans``, ``text``, ``just``, ``tuples``.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+    import string
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+    FALLBACK_EXAMPLES = 12
+
+    class _Strategy:
+        def __init__(self, gen):
+            self._gen = gen
+
+        def example(self, rnd: random.Random):
+            return self._gen(rnd)
+
+        def filter(self, pred):
+            def gen(rnd):
+                for _ in range(10_000):
+                    v = self._gen(rnd)
+                    if pred(v):
+                        return v
+                raise RuntimeError("fallback strategy filter never satisfied")
+
+            return _Strategy(gen)
+
+        def map(self, fn):
+            return _Strategy(lambda rnd: fn(self._gen(rnd)))
+
+    class _St:
+        @staticmethod
+        def floats(min_value=-1e6, max_value=1e6, allow_nan=False, width=64):
+            del allow_nan, width  # the fallback never generates NaN/inf
+
+            def gen(rnd):
+                return rnd.uniform(min_value, max_value)
+
+            return _Strategy(gen)
+
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1):
+            return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rnd: rnd.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rnd: seq[rnd.randrange(len(seq))])
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rnd: value)
+
+        @staticmethod
+        def text(alphabet=string.printable, max_size=32, min_size=0):
+            alphabet = list(alphabet)
+
+            def gen(rnd):
+                n = rnd.randint(min_size, max_size)
+                return "".join(alphabet[rnd.randrange(len(alphabet))] for _ in range(n))
+
+            return _Strategy(gen)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=16, unique=False):
+            def gen(rnd):
+                n = rnd.randint(min_size, max_size)
+                if not unique:
+                    return [elements.example(rnd) for _ in range(n)]
+                out, seen = [], set()
+                for _ in range(10_000):
+                    if len(out) == n:
+                        break
+                    v = elements.example(rnd)
+                    if v not in seen:
+                        seen.add(v)
+                        out.append(v)
+                return out
+
+            return _Strategy(gen)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(lambda rnd: tuple(s.example(rnd) for s in strategies))
+
+    st = _St()
+
+    def given(*gargs, **gkwargs):
+        def deco(fn):
+            def wrapper():
+                # seed per test name: crc32 is stable across processes (unlike
+                # hash(), which is salted), so failures reproduce exactly
+                rnd = random.Random(zlib.crc32(fn.__name__.encode()))
+                for _ in range(FALLBACK_EXAMPLES):
+                    vals = [s.example(rnd) for s in gargs]
+                    kw = {k: s.example(rnd) for k, s in gkwargs.items()}
+                    fn(*vals, **kw)
+
+            # NOT functools.wraps: pytest must see a zero-arg signature, or it
+            # would try to resolve the strategy parameters as fixtures.
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+    def settings(*args, **kwargs):  # noqa: ARG001 - accepted and ignored
+        def deco(fn):
+            return fn
+
+        return deco

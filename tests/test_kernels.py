@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests.hypothesis_compat import given, settings, st
 
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.glass_ffn import glass_ffn_block_sparse
