@@ -1,4 +1,5 @@
-"""Serving throughput: static batching vs continuous batching.
+"""Serving benchmark: static vs continuous vs paged batching, plus a
+latency-SLO sweep, with machine-readable output (``BENCH_serve.json``).
 
 Workload: N requests with one shared prompt length, Poisson arrivals (in
 decode-step ticks), and widely varying generation lengths — the regime the
@@ -7,35 +8,52 @@ loses: a static batch decodes until its LONGEST member finishes, so short
 requests burn arena slots doing nothing, and every batch waits for its last
 arrival before starting.
 
-Both engines serve identical requests with identical (random-init) weights:
+Engines serve identical requests with identical (random-init) weights:
 
   * static      — the original ``Engine``: requests grouped into batches of
                   ``max_slots`` in arrival order; each batch runs
                   max(max_new) steps for everyone;
   * continuous  — ``ContinuousEngine``: admit-as-slots-free, per-slot GLASS
-                  state, evict on completion.
+                  state, evict on completion; fixed slot-arena KV;
+  * paged       — ``PagedEngine``: same scheduling, but KV lives in a
+                  shared block pool (a request holds ceil(rows/block)
+                  blocks, not a max_len row) and prompts prefill in bounded
+                  chunks interleaved with decode.
 
 Reported per engine, all post-warmup (engines are reused so every jit cache
 is hot — a cold pass would mostly measure compilation):
 
   * useful tokens/sec — wall-clock.  CAVEAT: on this CPU micro-model the
     static engine fuses each whole trajectory into one XLA scan with zero
-    host round-trips, while the continuous engine pays a host scheduling
-    round-trip per decode chunk; at real model sizes per-step device compute
-    dominates and this inversion disappears.  The scheduling quality itself
-    is captured by the two hardware-independent metrics:
-  * mean completion latency in decode-step ticks on a shared virtual
-    timeline (static batches start at max(member arrivals, previous batch
-    end));
-  * slot-steps per useful token — arena occupancy burned per token emitted
-    (1.0 is perfect; static wastes slots holding short requests until the
-    batch's longest member finishes).
+    host round-trips, while the continuous/paged engines pay a host
+    scheduling round-trip per decode chunk; at real model sizes per-step
+    device compute dominates and this inversion disappears.  The scheduling
+    quality itself is captured by the hardware-independent metrics:
+  * completion latency in decode-step ticks (mean / p50 / p99) on a shared
+    virtual timeline (static batches start at max(member arrivals, previous
+    batch end));
+  * slot-steps per useful token — occupancy burned per token emitted;
+  * KV rows x ticks per useful token — *allocated* cache memory integrated
+    over time: the slot arena always holds max_slots x max_len rows, the
+    block pool only ceil(len/block) blocks per in-flight request.
+
+The latency-SLO sweep re-runs continuous vs paged across arrival rates and
+reports p50/p99 completion latency per rate (deterministic in ticks, so no
+warmup needed).
+
+Tick-accounting caveat: the continuous engine prefills out-of-band (a
+prompt costs zero ticks), while the paged engine charges one tick per
+prefill chunk — so its latency numbers carry an honest admission cost the
+slot arena hides.  The comparison favors continuous on latency by
+construction; the paged win is the KV-rows column.
 
     PYTHONPATH=src:. python benchmarks/serve_bench.py
 """
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 from typing import List, Tuple
 
 import jax
@@ -44,7 +62,7 @@ import numpy as np
 
 from repro.core import GlassConfig
 from repro.models import ModelConfig, build_model
-from repro.serve.engine import ContinuousEngine, Engine
+from repro.serve.engine import ContinuousEngine, Engine, PagedEngine
 from repro.serve.scheduler import Request
 
 CFG = ModelConfig(
@@ -57,12 +75,17 @@ N_REQUESTS = 24
 MAX_SLOTS = 4
 PROMPT_LEN = 8
 MAX_LEN = 48
+BLOCK_SIZE = 8
+CHUNK_TOKENS = 4
 ARRIVAL_RATE = 0.5  # mean requests per decode tick
+SWEEP_RATES = (0.25, 0.5, 1.0)
+GLASS = GlassConfig(density=0.5)
+OUT_JSON = Path(__file__).with_name("BENCH_serve.json")
 
 
-def _workload(seed: int = 0) -> List[Request]:
+def _workload(arrival_rate: float, seed: int = 0) -> List[Request]:
     rng = np.random.RandomState(seed)
-    arrivals = np.cumsum(rng.exponential(1.0 / ARRIVAL_RATE, size=N_REQUESTS)).astype(int)
+    arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, size=N_REQUESTS)).astype(int)
     new = rng.randint(4, 33, size=N_REQUESTS)  # short and long generations mixed
     return [
         Request(
@@ -75,12 +98,20 @@ def _workload(seed: int = 0) -> List[Request]:
     ]
 
 
+def _pcts(latencies) -> dict:
+    a = np.asarray(latencies, np.float64)
+    return dict(
+        mean_latency_steps=float(a.mean()),
+        p50_latency_steps=float(np.percentile(a, 50)),
+        p99_latency_steps=float(np.percentile(a, 99)),
+    )
+
+
 def _static_serve(eng: Engine, reqs: List[Request]):
     """Arrival-order batches of MAX_SLOTS through the static Engine.
 
-    Returns (wall_s, mean_latency_steps): wall time of the generate calls;
-    latency on the virtual step timeline (batch waits for its last arrival
-    and for the previous batch's slots)."""
+    Latency on the virtual step timeline: a batch waits for its last
+    arrival and for the previous batch's slots."""
     wall = 0.0
     latencies = []
     t_virtual = 0
@@ -97,63 +128,141 @@ def _static_serve(eng: Engine, reqs: List[Request]):
         start = max(t_virtual, max(r.arrival for r in batch))
         t_virtual = start + steps
         latencies += [t_virtual - r.arrival for r in batch]
-    return wall, float(np.mean(latencies)), slot_steps
+    return wall, latencies, slot_steps, None
 
 
-def _continuous_serve(eng: ContinuousEngine, reqs: List[Request]):
-    # replay the arrival pattern relative to the engine's current tick, so a
-    # warmed engine serves the identical schedule it compiled for
+def _queue_serve(eng, reqs: List[Request]):
+    """Shared path for ContinuousEngine / PagedEngine: replay the arrival
+    pattern relative to the engine's current tick, so a warmed engine serves
+    the identical schedule it compiled for."""
     base = eng.t
     ss0 = eng.slot_steps
-    wave = [Request(r.uid, r.prompt, r.max_new, base + r.arrival) for r in reqs]
+    wave = [
+        Request(r.uid, r.prompt, r.max_new, base + r.arrival, r.priority, r.deadline)
+        for r in reqs
+    ]
     t0 = time.perf_counter()
     done = eng.run(wave)
     jax.block_until_ready(eng.pool.cache)
     wall = time.perf_counter() - t0
-    lat = float(np.mean([f.finished_step - f.arrival for f in done.values()]))
-    return wall, lat, eng.slot_steps - ss0
+    latencies = [f.finished_step - f.arrival for f in done.values()]
+    ticks = eng.t - base
+    if isinstance(eng, PagedEngine):
+        row_ticks = eng.kv_row_ticks  # cumulative; caller diffs
+    else:
+        row_ticks = eng.pool.max_slots * eng.pool.max_len * ticks
+    return wall, latencies, eng.slot_steps - ss0, row_ticks
 
 
-def serve_throughput() -> Tuple[List[dict], float]:
+def serve_throughput() -> Tuple[List[dict], dict]:
     model = build_model(CFG)
     params = model.init(jax.random.key(0))
     prior = jnp.abs(jax.random.normal(jax.random.key(1), (CFG.n_layers, CFG.d_ff)))
-    reqs = _workload()
+    reqs = _workload(ARRIVAL_RATE)
     useful_tokens = sum(r.max_new for r in reqs)
 
+    def mk_paged():
+        return PagedEngine(
+            model, params, max_slots=MAX_SLOTS, max_len=MAX_LEN,
+            block_size=BLOCK_SIZE, chunk_tokens=CHUNK_TOKENS,
+            glass=GLASS, global_prior=prior,
+        )
+
     engines = {
-        "static": (Engine(model, params, glass=GlassConfig(density=0.5),
-                          global_prior=prior), _static_serve),
-        "continuous": (ContinuousEngine(model, params, max_slots=MAX_SLOTS,
-                                        max_len=MAX_LEN, glass=GlassConfig(density=0.5),
-                                        global_prior=prior), _continuous_serve),
+        "static": (Engine(model, params, glass=GLASS, global_prior=prior), _static_serve),
+        "continuous": (
+            ContinuousEngine(model, params, max_slots=MAX_SLOTS, max_len=MAX_LEN,
+                             glass=GLASS, global_prior=prior),
+            _queue_serve,
+        ),
+        "paged": (mk_paged(), _queue_serve),
     }
     rows = []
     for name, (eng, fn) in engines.items():
         fn(eng, reqs)  # warmup on the SAME instance: jit caches stay hot
-        wall, lat, slot_steps = fn(eng, reqs)
-        rows.append(
-            dict(
-                engine=name,
-                tokens_per_s=useful_tokens / wall,
-                wall_s=wall,
-                mean_latency_steps=lat,
-                slot_steps_per_token=slot_steps / useful_tokens,
-                useful_tokens=useful_tokens,
-            )
+        rt0 = eng.kv_row_ticks if isinstance(eng, PagedEngine) else None
+        wall, latencies, slot_steps, row_ticks = fn(eng, reqs)
+        if isinstance(eng, PagedEngine):
+            row_ticks = eng.kv_row_ticks - rt0
+        row = dict(
+            engine=name,
+            tokens_per_s=useful_tokens / wall,
+            wall_s=wall,
+            slot_steps_per_token=slot_steps / useful_tokens,
+            useful_tokens=useful_tokens,
+            **_pcts(latencies),
         )
-    latency_speedup = rows[0]["mean_latency_steps"] / rows[1]["mean_latency_steps"]
-    return rows, latency_speedup
+        if row_ticks is not None:
+            row["kv_row_ticks_per_token"] = row_ticks / useful_tokens
+        if isinstance(eng, PagedEngine):
+            row["peak_kv_rows"] = eng.pool.peak_blocks * eng.pool.block_size
+            row["arena_kv_rows"] = eng.pool.max_slots * eng.pool.max_len
+        rows.append(row)
+
+    # latency-SLO sweep: arrival rate vs p50/p99 (deterministic in ticks)
+    sweep = []
+    cont = ContinuousEngine(model, params, max_slots=MAX_SLOTS, max_len=MAX_LEN,
+                            glass=GLASS, global_prior=prior)
+    paged = mk_paged()
+    for rate in SWEEP_RATES:
+        wave = _workload(rate, seed=1)
+        for name, eng in (("continuous", cont), ("paged", paged)):
+            _, latencies, _, _ = _queue_serve(eng, wave)
+            sweep.append(dict(engine=name, arrival_rate=rate, **_pcts(latencies)))
+
+    by = {r["engine"]: r for r in rows}
+    headline = dict(
+        latency_speedup_continuous_vs_static=(
+            by["static"]["mean_latency_steps"] / by["continuous"]["mean_latency_steps"]
+        ),
+        slot_step_saving_continuous_vs_static=(
+            by["static"]["slot_steps_per_token"] / by["continuous"]["slot_steps_per_token"]
+        ),
+        kv_saving_paged_vs_continuous=(
+            by["continuous"]["kv_row_ticks_per_token"] / by["paged"]["kv_row_ticks_per_token"]
+        ),
+        paged_latency_overhead_vs_continuous=(
+            by["paged"]["mean_latency_steps"] / by["continuous"]["mean_latency_steps"]
+        ),
+    )
+    return rows, dict(
+        config=dict(
+            model=CFG.name, n_requests=N_REQUESTS, max_slots=MAX_SLOTS,
+            prompt_len=PROMPT_LEN, max_len=MAX_LEN, block_size=BLOCK_SIZE,
+            chunk_tokens=CHUNK_TOKENS, arrival_rate=ARRIVAL_RATE,
+            glass_density=GLASS.density,
+        ),
+        engines=rows,
+        slo_sweep=sweep,
+        headline=headline,
+    )
 
 
 if __name__ == "__main__":
-    rows, latency_speedup = serve_throughput()
-    print(f"{'engine':12s} {'tok/s':>10s} {'wall_s':>8s} {'latency(steps)':>15s} {'slot-steps/tok':>15s}")
+    rows, report = serve_throughput()
+    hdr = f"{'engine':12s} {'tok/s':>9s} {'wall_s':>8s} {'lat mean':>9s} {'p50':>7s} {'p99':>7s} {'ss/tok':>7s} {'kvrows/tok':>11s}"
+    print(hdr)
     for r in rows:
         print(
-            f"{r['engine']:12s} {r['tokens_per_s']:10.1f} {r['wall_s']:8.3f} "
-            f"{r['mean_latency_steps']:15.1f} {r['slot_steps_per_token']:15.2f}"
+            f"{r['engine']:12s} {r['tokens_per_s']:9.1f} {r['wall_s']:8.3f} "
+            f"{r['mean_latency_steps']:9.1f} {r['p50_latency_steps']:7.1f} "
+            f"{r['p99_latency_steps']:7.1f} {r['slot_steps_per_token']:7.2f} "
+            f"{r.get('kv_row_ticks_per_token', float('nan')):11.1f}"
         )
-    print(f"continuous vs static: {latency_speedup:.2f}x lower mean completion latency, "
-          f"{rows[0]['slot_steps_per_token'] / rows[1]['slot_steps_per_token']:.2f}x less "
-          f"arena occupancy per token")
+    h = report["headline"]
+    print(
+        f"continuous vs static: {h['latency_speedup_continuous_vs_static']:.2f}x lower mean "
+        f"completion latency, {h['slot_step_saving_continuous_vs_static']:.2f}x less occupancy/token"
+    )
+    print(
+        f"paged vs continuous:  {h['kv_saving_paged_vs_continuous']:.2f}x less allocated KV "
+        f"memory/token at {h['paged_latency_overhead_vs_continuous']:.2f}x the mean latency"
+    )
+    print("\nSLO sweep (arrival rate -> completion latency):")
+    for s in report["slo_sweep"]:
+        print(
+            f"  rate={s['arrival_rate']:.2f} {s['engine']:12s} "
+            f"p50={s['p50_latency_steps']:7.1f} p99={s['p99_latency_steps']:7.1f}"
+        )
+    OUT_JSON.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"\nwrote {OUT_JSON}")

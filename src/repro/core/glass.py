@@ -30,7 +30,13 @@ from .nps import NPSConfig, nps_corpus, teacher_forced_batch
 
 @dataclass(frozen=True)
 class MaskSet:
-    idx: jax.Array  # (L, k) int32 (MoE: (L, E, k))
+    # CAUTION: ``idx`` semantics follow the selection mode.  ``neuron`` /
+    # ``shard_balanced`` yield per-unit indices (L, k) — the input
+    # ``compact_params`` gathers with.  ``selection="block"`` yields *block*
+    # ids (L, nb_keep) for the pallas block-sparse decode kernel; gathering
+    # weights with block ids would silently select the wrong units, so the
+    # engines refuse ``glass_mode="compact"`` with block selection.
+    idx: jax.Array  # (L, k) int32 (MoE: (L, E, k)); block selection: block ids
     mask: jax.Array  # (L, m) f32   (MoE: (L, E, f))
     scores: jax.Array  # fused consensus scores, same shape as mask
 

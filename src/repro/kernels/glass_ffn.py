@@ -91,3 +91,72 @@ def glass_ffn_block_sparse(
         interpret=interpret,
     )
     return fn(block_idx, x, w_gate, w_up, w_down)
+
+
+def _kernel_rowwise(idx_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref, *, act: str, gated: bool):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    up = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+    if gated:
+        gate = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+        h = _ACTS[act](gate) * up
+    else:
+        h = _ACTS[act](up)
+    o_ref[...] += jnp.dot(
+        h.astype(wd_ref.dtype), wd_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def glass_ffn_block_sparse_rowwise(
+    x: jax.Array,  # (B, d) — B serving slots, each with its OWN block list
+    w_up: jax.Array,  # (d, m)
+    w_down: jax.Array,  # (m, d)
+    block_idx: jax.Array,  # (B, nb_active) int32 — per-row active block ids
+    w_gate: jax.Array | None = None,  # (d, m)
+    *,
+    act: str = "silu",
+    block_size: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-row block-sparse GLASS FFN: the continuous-batching decode path.
+
+    Each serving slot carries its own prompt-adaptive mask, so the active
+    block list differs per row.  Grid (B, nb): step (b, i) streams row b's
+    i-th active weight tiles; the row's f32 accumulator lives in its (1, d)
+    output block (consecutive grid steps revisit it, which is safe on TPU's
+    sequential grid).  Rows are processed independently — batching rows that
+    share a block list into the shared-list kernel is a further optimization
+    the engine can apply when masks collide.  Returns (B, d) f32.
+    """
+    B, d = x.shape
+    m = w_up.shape[1]
+    assert m % block_size == 0, (m, block_size)
+    assert block_idx.shape[0] == B, (block_idx.shape, B)
+    nb = block_idx.shape[1]
+    gated = w_gate is not None
+    if not gated:  # dummy ref so the kernel signature stays uniform
+        w_gate = w_up
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, nb),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, i, idx: (b, 0)),  # x: row b resident
+            pl.BlockSpec((d, block_size), lambda b, i, idx: (0, idx[b, i])),  # w_gate tile
+            pl.BlockSpec((d, block_size), lambda b, i, idx: (0, idx[b, i])),  # w_up tile
+            pl.BlockSpec((block_size, d), lambda b, i, idx: (idx[b, i], 0)),  # w_down tile
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda b, i, idx: (b, 0)),
+    )
+    fn = pl.pallas_call(
+        functools.partial(_kernel_rowwise, act=act, gated=gated),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, d), jnp.float32),
+        interpret=interpret,
+    )
+    return fn(block_idx, x, w_gate, w_up, w_down)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from .flash_attention import flash_attention as _flash
 from .glass_ffn import glass_ffn_block_sparse as _glass_ffn
+from .glass_ffn import glass_ffn_block_sparse_rowwise as _glass_ffn_rowwise
 from .local_stats import local_stats as _local_stats
 
 INTERPRET = jax.default_backend() == "cpu"
@@ -26,6 +27,18 @@ def glass_ffn(
     """Block-sparse GLASS FFN decode step: only active weight blocks are read."""
     it = INTERPRET if interpret is None else interpret
     return _glass_ffn(
+        x, w_up, w_down, block_idx, w_gate, act=act, block_size=block_size, interpret=it
+    )
+
+
+@partial(jax.jit, static_argnames=("act", "block_size", "interpret"))
+def glass_ffn_rowwise(
+    x, w_up, w_down, block_idx, w_gate=None, *, act="silu", block_size=128, interpret=None
+):
+    """Per-row block-sparse GLASS FFN: block_idx (B, nb) — one prompt-adaptive
+    block list per serving slot (the continuous-batching decode path)."""
+    it = INTERPRET if interpret is None else interpret
+    return _glass_ffn_rowwise(
         x, w_up, w_down, block_idx, w_gate, act=act, block_size=block_size, interpret=it
     )
 

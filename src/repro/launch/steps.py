@@ -160,8 +160,8 @@ def make_decode_step(model: Model, greedy: bool = True):
 
 
 def make_decode_step_masked(model: Model):
-    """Masked decode (no compaction): GLASS as a multiplier mask — used by the
-    block-sparse kernel path where weights stay resident and masked."""
+    """Masked decode (no compaction): GLASS as a multiplier mask — the jnp
+    reference for the block-sparse kernel path."""
 
     def decode(params, cache, token, cache_len, ffn_masks):
         logits, cache = model.decode_step(params, token, cache, cache_len, ffn_masks=ffn_masks)
@@ -169,3 +169,37 @@ def make_decode_step_masked(model: Model):
         return nxt, cache
 
     return decode
+
+
+def make_decode_step_block_sparse(model: Model, block_size: int):
+    """Block-sparse decode: per-request active FFN block ids (from
+    ``GlassConfig(selection="block")``) feed the pallas ``glass_ffn`` kernel
+    directly — weights stay resident, only active (d x block_size) tiles are
+    streamed.  ``block_idx`` is (L, nb_keep) shared or (L, B, nb_keep)
+    per-slot (continuous batching)."""
+
+    def decode(params, cache, token, cache_len, block_idx):
+        logits, cache = model.decode_step(
+            params, token, cache, cache_len,
+            ffn_block_idx=block_idx, ffn_block_size=block_size,
+        )
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+
+    return decode
+
+
+def make_chunked_prefill(model: Model, chunk_tokens: int):
+    """Chunked-prefill step for the paged serving path: processes up to
+    ``chunk_tokens`` prompt tokens against a paged cache + block table,
+    returning merged-by-addition GLASS chunk stats (see
+    ``Model.prefill_chunk``).  The dry-run lowers one chunk at the bound
+    length; the engine jit-caches per observed (T, nb) signature."""
+
+    def prefill_chunk(params, tokens, cache, cache_len, block_table):
+        assert tokens.shape[1] <= chunk_tokens, (tokens.shape, chunk_tokens)
+        return model.prefill_chunk(
+            params, tokens, cache, cache_len, block_table=block_table
+        )
+
+    return prefill_chunk

@@ -91,6 +91,33 @@ class Model:
             return transformer.hybrid_prefill(params, inputs["tokens"], cfg, max_len)
         return transformer.dense_prefill(params, inputs["tokens"], cfg, max_len)
 
+    def prefill_chunk(
+        self,
+        params,
+        tokens: jax.Array,  # (B, T): the next T prompt tokens
+        cache,  # paged leaves = whole block arenas; state leaves = this request's rows
+        cache_len: jax.Array,  # (B,) int32 tokens already processed
+        *,
+        block_table=None,  # (B, nb) int32; None for pure-state families (ssm)
+    ):
+        """Incremental prefill: extend the cache by T prompt tokens.
+
+        Returns (logits (B,T,V), cache, chunk_stats); chunk_stats are sums
+        over this chunk's tokens and merge across chunks by addition, so the
+        finalized GLASS local signal is the same as single-shot prefill."""
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            raise NotImplementedError("chunked prefill targets decoder LMs")
+        if cfg.family == "ssm":
+            return transformer.rwkv_prefill_chunk(params, tokens, cfg, cache)
+        if cfg.family == "hybrid":
+            return transformer.hybrid_prefill_chunk(
+                params, tokens, cfg, cache, block_table, cache_len
+            )
+        return transformer.dense_prefill_chunk(
+            params, tokens, cfg, cache, block_table, cache_len
+        )
+
     def decode_step(
         self,
         params,
@@ -100,8 +127,13 @@ class Model:
         *,
         ffn_masks=None,  # shared (L, m), or per-slot with an extra B axis after L
         compact_layers=None,  # compact FFN pytree; per-slot adds a B axis after L
+        block_table=None,  # (B, nb) int32: paged-KV serving (BlockPool)
+        ffn_block_idx=None,  # active FFN block ids -> block-sparse pallas kernel
+        ffn_block_size: int = 128,
     ):
         cfg = self.cfg
+        if ffn_block_idx is not None and cfg.family not in ("dense", "vlm"):
+            raise NotImplementedError("block-sparse decode targets dense-FFN families")
         if cfg.is_encoder_decoder:
             return encdec.encdec_decode_step(
                 params, token, cache, cache_len, cfg, ffn_masks=ffn_masks, compact_layers=compact_layers
@@ -118,10 +150,13 @@ class Model:
             if mask is not None and mask.ndim > 1:
                 mask = mask[0]
             return transformer.hybrid_decode_step(
-                params, token, cache, cache_len, cfg, shared_mask=mask, shared_compact=compact_layers
+                params, token, cache, cache_len, cfg, shared_mask=mask,
+                shared_compact=compact_layers, block_table=block_table,
             )
         return transformer.dense_decode_step(
-            params, token, cache, cache_len, cfg, ffn_masks=ffn_masks, compact_layers=compact_layers
+            params, token, cache, cache_len, cfg, ffn_masks=ffn_masks,
+            compact_layers=compact_layers, block_table=block_table,
+            ffn_block_idx=ffn_block_idx, ffn_block_size=ffn_block_size,
         )
 
     def init_cache(self, batch: int, max_len: int):

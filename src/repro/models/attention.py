@@ -252,3 +252,54 @@ def attention_decode(
     out = _attend(q, cache_k, cache_v, cfg, mask)
     y = out @ p["wo"]
     return y, cache_k, cache_v
+
+
+def attention_decode_paged(
+    p: dict,
+    x: jax.Array,  # (B, T, d): T = 1 decode tick, T > 1 prefill chunk
+    cfg: ModelConfig,
+    *,
+    cache_k: jax.Array,  # (num_blocks, block_size, K, hd) — shared block pool
+    cache_v: jax.Array,
+    block_table: jax.Array,  # (B, nb) int32 block ids in logical order
+    cache_len: jax.Array,  # (B,) int32 tokens already in each row's blocks
+    window=None,
+):
+    """Decode/chunk-prefill attention through a paged KV block table.
+
+    The T new tokens' k/v are scattered into each row's own blocks at
+    logical positions ``cache_len + t`` (page ``table[pos // bs]``, offset
+    ``pos % bs``), then the row's blocks are gathered back into a
+    ``(B, nb * bs)`` logical view and attended with the usual causal +
+    ``kv_len`` masking — positions beyond a row's frontier (a block's
+    previous owner, or the zero init) are masked exactly like stale arena
+    rows in :func:`attention_decode`.  Rows that must stay inert (free /
+    mid-prefill slots of the fixed decode batch) point their table at the
+    reserved trash block 0 and carry ``cache_len = 0``.
+    """
+    B, T, _ = x.shape
+    nb, bs = block_table.shape[1], cache_k.shape[1]
+    q, k, v = _project_qkv(p, x, cfg)
+    cache_len = jnp.asarray(cache_len, jnp.int32)
+    pos = cache_len[:, None] + jnp.arange(T, dtype=jnp.int32)[None]  # (B, T)
+    if cfg.rope_type == "mrope":
+        rp = jnp.broadcast_to(pos[None], (3, B, T))
+    else:
+        rp = pos
+    q, k = _rope_qk(q, k, cfg, rp)
+    q = constrain(q, "decode_q")
+    if q.ndim == 4:
+        # repeated layout: regroup to (B,T,K,G,hd) — see attention_decode
+        B_, T_, H_, hd_ = q.shape
+        q = q.reshape(B_, T_, cfg.n_kv_heads, cfg.q_per_kv, hd_)
+    pages = jnp.take_along_axis(block_table, pos // bs, axis=1)  # (B, T)
+    offs = pos % bs
+    cache_k = constrain(cache_k.at[pages, offs].set(k), "decode_cache")
+    cache_v = constrain(cache_v.at[pages, offs].set(v), "decode_cache")
+    kg = cache_k[block_table].reshape(B, nb * bs, *cache_k.shape[2:])
+    vg = cache_v[block_table].reshape(B, nb * bs, *cache_v.shape[2:])
+    kvpos = jnp.arange(nb * bs, dtype=jnp.int32)
+    mask = causal_window_mask(pos, kvpos, window, kv_len=cache_len + T)
+    out = _attend(q, kg, vg, cfg, mask)
+    y = out @ p["wo"]
+    return y, cache_k, cache_v

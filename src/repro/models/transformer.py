@@ -25,6 +25,7 @@ from ..sharding.ctx import constrain
 from . import rwkv6 as rk
 from .attention import (
     attention_decode,
+    attention_decode_paged,
     attention_forward,
     init_attention,
     init_cache,
@@ -310,28 +311,82 @@ def dense_prefill(params, tokens, cfg: ModelConfig, max_len: int):
     return logits, cache, stats
 
 
+def dense_prefill_chunk(params, tokens, cfg: ModelConfig, cache, block_table, cache_len):
+    """One chunk of an incremental (paged) prefill for dense/moe/vlm.
+
+    tokens (B, T) continue a prompt whose first ``cache_len`` tokens already
+    live in the paged cache {"k","v": (L, num_blocks, bs, K, hd)} through
+    ``block_table`` (B, nb).  Positions are absolute (``cache_len + t``), so
+    RoPE and sliding windows match the single-shot prefill exactly.  Returns
+    (logits (B,T,V), cache, chunk_stats) — stats are *sums* over this
+    chunk's tokens and merge across chunks by addition (importance.merge).
+    """
+    x = constrain(embed_tokens(params, tokens, cfg), "act_btd")
+    windows = layer_windows(cfg)
+    plus_one = cfg.sandwich_norms
+
+    def body(x, xs):
+        lp, ck, cv, window = xs
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps, plus_one)
+        a, ck, cv = attention_decode_paged(
+            lp["attn"], h, cfg, cache_k=ck, cache_v=cv,
+            block_table=block_table, cache_len=cache_len, window=window,
+        )
+        if cfg.sandwich_norms:
+            a = rms_norm(a, lp["ln1_post"], cfg.norm_eps, True)
+        x = x + a
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps, plus_one)
+        if cfg.family == "moe":
+            y, _, stats = moe_forward(lp["moe"], h2, cfg, collect_stats=True)
+        else:
+            y, stats = ffn_forward_with_stats(lp["ffn"], h2, cfg)
+        if cfg.sandwich_norms:
+            y = rms_norm(y, lp["ln2_post"], cfg.norm_eps, True)
+        x = constrain(x + y, "act_btd")
+        return x, (ck, cv, stats)
+
+    x, (ck, cv, stats) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"], windows)
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.sandwich_norms)
+    logits = lm_logits(params, x, cfg)
+    return logits, {"k": ck, "v": cv}, stats
+
+
 def dense_decode_step(
     params,
     token,  # (B, 1) int32
-    cache,  # {"k","v": (L,B,Smax,K,hd)}
+    cache,  # {"k","v": (L,B,Smax,K,hd)}; paged: (L,num_blocks,bs,K,hd)
     cache_len,  # int32: scalar, or (B,) per-slot lengths (continuous batching)
     cfg: ModelConfig,
     *,
     ffn_masks=None,  # (L, m) shared, or (L, B, m) per-slot; MoE adds an E axis
     compact_layers=None,  # stacked compact FFN params (L-leading) replacing lp["ffn"];
     # per-slot serving stacks an extra slot axis after L, e.g. w_up (L, B, d, k)
+    block_table=None,  # (B, nb) int32: paged-KV block table (BlockPool serving)
+    ffn_block_idx=None,  # (L, nb_keep) shared or (L, B, nb_keep) per-slot active
+    # FFN block ids -> block-sparse pallas kernel instead of dense masked matmuls
+    ffn_block_size: int = 128,
 ):
     """One decode step across all layers (scan). Returns (logits, new_cache)."""
     x = embed_tokens(params, token, cfg)
     windows = layer_windows(cfg)
     plus_one = cfg.sandwich_norms
+    if ffn_block_idx is not None and cfg.family == "moe":
+        raise NotImplementedError("block-sparse decode targets dense-FFN families")
 
     def body(x, xs):
-        lp, ck, cv, window, mask_l, comp_l = xs
+        lp, ck, cv, window, mask_l, comp_l, bidx_l = xs
         h = rms_norm(x, lp["ln1"], cfg.norm_eps, plus_one)
-        a, ck, cv = attention_decode(
-            lp["attn"], h, cfg, cache_k=ck, cache_v=cv, cache_len=cache_len, window=window
-        )
+        if block_table is not None:
+            a, ck, cv = attention_decode_paged(
+                lp["attn"], h, cfg, cache_k=ck, cache_v=cv,
+                block_table=block_table, cache_len=cache_len, window=window,
+            )
+        else:
+            a, ck, cv = attention_decode(
+                lp["attn"], h, cfg, cache_k=ck, cache_v=cv, cache_len=cache_len, window=window
+            )
         if cfg.sandwich_norms:
             a = rms_norm(a, lp["ln1_post"], cfg.norm_eps, True)
         x = x + a
@@ -339,6 +394,16 @@ def dense_decode_step(
         if cfg.family == "moe":
             mp = comp_l if comp_l is not None else lp["moe"]
             y, _, _ = moe_forward(mp, h2, cfg, mask=mask_l)
+        elif bidx_l is not None:
+            from ..kernels.ops import glass_ffn, glass_ffn_rowwise
+
+            fp = lp["ffn"]
+            kernel = glass_ffn_rowwise if bidx_l.ndim == 2 else glass_ffn
+            y32 = kernel(
+                h2[:, 0], fp["w_up"], fp["w_down"], bidx_l, fp.get("w_gate"),
+                act=cfg.ffn_act, block_size=ffn_block_size,
+            )
+            y = y32.astype(x.dtype)[:, None]
         else:
             fp = comp_l if comp_l is not None else lp["ffn"]
             if mask_l is not None and mask_l.ndim == 2:  # per-slot (B, m)
@@ -352,17 +417,22 @@ def dense_decode_step(
     L = cfg.n_layers
     have_mask = ffn_masks is not None
     have_comp = compact_layers is not None
+    have_bidx = ffn_block_idx is not None
     mask_xs = ffn_masks if have_mask else jnp.zeros((L, 0))
     comp_xs = compact_layers if have_comp else jnp.zeros((L, 0))
+    bidx_xs = ffn_block_idx if have_bidx else jnp.zeros((L, 0))
 
     def body_wrap(x, xs):
-        lp, ck, cv, window, mask_l, comp_l = xs
+        lp, ck, cv, window, mask_l, comp_l, bidx_l = xs
         return body(
-            x, (lp, ck, cv, window, mask_l if have_mask else None, comp_l if have_comp else None)
+            x,
+            (lp, ck, cv, window, mask_l if have_mask else None,
+             comp_l if have_comp else None, bidx_l if have_bidx else None),
         )
 
     x, (ck, cv) = jax.lax.scan(
-        body_wrap, x, (params["layers"], cache["k"], cache["v"], windows, mask_xs, comp_xs)
+        body_wrap, x,
+        (params["layers"], cache["k"], cache["v"], windows, mask_xs, comp_xs, bidx_xs),
     )
     x = rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.sandwich_norms)
     logits = lm_logits(params, x, cfg)
@@ -461,6 +531,39 @@ def rwkv_decode_step(params, token, cache, cache_len, cfg: ModelConfig, *, ffn_m
     )
     x = layer_norm(x, params["final_norm"], params["final_norm_b"], cfg.norm_eps)
     return lm_logits(params, x, cfg), {"state": state, "shift_tm": sh_tm, "shift_cm": sh_cm}
+
+
+def rwkv_prefill_chunk(params, tokens, cfg: ModelConfig, cache):
+    """One chunk of an incremental rwkv6 prefill.
+
+    The cache IS the recurrent state ({"state","shift_tm","shift_cm"}, rows
+    for this request only), threaded through the chunkwise-parallel forward
+    as initial carries; there are no KV rows to page.  Returns
+    (logits (B,T,V), cache, chunk_stats)."""
+    S = tokens.shape[1]
+    x = constrain(embed_tokens(params, tokens, cfg), "act_btd")
+    x = layer_norm(x, params["ln0_w"], params["ln0_b"], cfg.norm_eps)
+
+    def body(x, xs):
+        lp, st, sh_tm, sh_cm = xs
+        h = layer_norm(x, lp["ln1_w"], lp["ln1_b"], cfg.norm_eps)
+        # chunk=S: one wkv6 chunk per prefill chunk (T is engine-bounded, so
+        # the intra-chunk quadratic term stays small)
+        y, st, sh_tm = rk.time_mix_forward(lp["tm"], h, cfg, state=st, shift_prev=sh_tm, chunk=S)
+        x = x + y
+        h2 = layer_norm(x, lp["ln2_w"], lp["ln2_b"], cfg.norm_eps)
+        y2, sh_cm, stats = rk.channel_mix_forward(
+            lp["cm"], h2, cfg, shift_prev=sh_cm, collect_stats=True
+        )
+        x = constrain(x + y2, "act_btd")
+        return x, (st, sh_tm, sh_cm, stats)
+
+    x, (st, sh_tm, sh_cm, stats) = jax.lax.scan(
+        body, x, (params["layers"], cache["state"], cache["shift_tm"], cache["shift_cm"])
+    )
+    x = layer_norm(x, params["final_norm"], params["final_norm_b"], cfg.norm_eps)
+    logits = lm_logits(params, x, cfg)
+    return logits, {"state": st, "shift_tm": sh_tm, "shift_cm": sh_cm}, stats
 
 
 # ---------------------------------------------------------------------------
@@ -565,7 +668,8 @@ def hybrid_prefill(params, tokens, cfg: ModelConfig, max_len: int):
 
 
 def hybrid_decode_step(
-    params, token, cache, cache_len, cfg: ModelConfig, *, shared_mask=None, shared_compact=None
+    params, token, cache, cache_len, cfg: ModelConfig, *, shared_mask=None,
+    shared_compact=None, block_table=None
 ):
     n_groups, g, n_tail = hybrid_layout(cfg)
     x = embed_tokens(params, token, cfg)
@@ -588,7 +692,15 @@ def hybrid_decode_step(
 
         x, (ssm_g, conv_g) = jax.lax.scan(inner, x, (glp, ssm_g, conv_g))
         h = rms_norm(x, sp["ln1"], cfg.norm_eps)
-        a, ck, cv = attention_decode(sp["attn"], h, cfg, cache_k=ck, cache_v=cv, cache_len=cache_len)
+        if block_table is not None:
+            a, ck, cv = attention_decode_paged(
+                sp["attn"], h, cfg, cache_k=ck, cache_v=cv,
+                block_table=block_table, cache_len=cache_len,
+            )
+        else:
+            a, ck, cv = attention_decode(
+                sp["attn"], h, cfg, cache_k=ck, cache_v=cv, cache_len=cache_len
+            )
         x = x + a
         h2 = rms_norm(x, sp["ln2"], cfg.norm_eps)
         fp = shared_compact if shared_compact is not None else sp["ffn"]
@@ -612,6 +724,58 @@ def hybrid_decode_step(
         new_cache["tail_ssm"], new_cache["tail_conv"] = tssm, tconv
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     return lm_logits(params, x, cfg), new_cache
+
+
+def hybrid_prefill_chunk(params, tokens, cfg: ModelConfig, cache, block_table, cache_len):
+    """One chunk of an incremental hybrid (zamba2) prefill.
+
+    Mamba layers thread their ssm/conv state rows as initial carries
+    (``mamba2_forward(init_state, conv_prev)``); the shared attention block
+    pages its KV through ``block_table`` like the dense path.  Returns
+    (logits, cache, chunk_stats) with the shared block's stats aggregated
+    over groups exactly as in :func:`hybrid_forward`."""
+    n_groups, g, n_tail = hybrid_layout(cfg)
+    T = tokens.shape[1]
+    x = embed_tokens(params, tokens, cfg)
+    sp = params["shared_attn"]
+
+    def mamba_layer(x, lp, ssm0, conv0):
+        h = rms_norm(x, lp["ln"], cfg.norm_eps)
+        y, (ssm, conv) = mamba2_forward(lp["mixer"], h, cfg, init_state=ssm0, conv_prev=conv0, chunk=T)
+        return constrain(x + y, "act_btd"), ssm, conv
+
+    def inner(c, ixs):
+        lp, s0, c0 = ixs
+        xx, s1, c1 = mamba_layer(c, lp, s0, c0)
+        return xx, (s1, c1)
+
+    def group_body(x, xs):
+        glp, ssm_g, conv_g, ck, cv = xs
+        x, (ssm_g, conv_g) = jax.lax.scan(inner, x, (glp, ssm_g, conv_g))
+        h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+        a, ck, cv = attention_decode_paged(
+            sp["attn"], h, cfg, cache_k=ck, cache_v=cv,
+            block_table=block_table, cache_len=cache_len,
+        )
+        x = x + a
+        h2 = rms_norm(x, sp["ln2"], cfg.norm_eps)
+        y, stats = ffn_forward_with_stats(sp["ffn"], h2, cfg)
+        x = constrain(x + y, "act_btd")
+        return x, (ssm_g, conv_g, ck, cv, stats)
+
+    x, (ssm, conv, ck, cv, stats) = jax.lax.scan(
+        group_body, x, (params["layers"], cache["ssm"], cache["conv"], cache["k"], cache["v"])
+    )
+    new_cache = dict(cache, ssm=ssm, conv=conv, k=ck, v=cv)
+    if n_tail:
+        x, (tssm, tconv) = jax.lax.scan(
+            inner, x, (params["tail"], cache["tail_ssm"], cache["tail_conv"])
+        )
+        new_cache["tail_ssm"], new_cache["tail_conv"] = tssm, tconv
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params, x, cfg)
+    stats = {"sum_abs": jnp.sum(stats["sum_abs"], axis=0), "count": jnp.sum(stats["count"])}
+    return logits, new_cache, stats
 
 
 # ---------------------------------------------------------------------------

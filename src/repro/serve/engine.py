@@ -22,9 +22,18 @@ Request lifecycle (paper Fig. 2 right), per slot in the continuous case:
   3. gather compact FFN weights once, into the slot's row;
   4. steady-state decode with the compact weights (density * FLOPs/bytes).
 
+``PagedEngine`` — the paged refactor of the continuous engine: a
+``BlockPool`` block table replaces the slot arena (a request's KV footprint
+is ``ceil(rows / block_size)`` blocks, not ``max_len``), prompts are
+prefilled in bounded-token *chunks* interleaved with decode ticks (GLASS
+local stats accumulate across chunks; the fused mask is finalized at the
+last chunk), and admission follows a selectable ``AdmissionPolicy``.
+
 ``glass=None`` serves dense.  ``mode="masked"`` keeps full weights and
-multiplies the mask in (the block-sparse-kernel deployment); ``"compact"``
-gathers (the fast-memory-residency deployment).
+multiplies the mask in; ``"compact"`` gathers (the fast-memory-residency
+deployment); ``"block_sparse"`` (with ``selection="block"``) feeds each
+slot's active block list to the pallas ``glass_ffn`` kernel — the TPU-native
+execution of the mask, reading only active weight tiles from HBM.
 """
 from __future__ import annotations
 
@@ -39,9 +48,9 @@ import numpy as np
 from ..core.fusion import GlassConfig
 from ..core.glass import build_masks, compact_params
 from ..models.api import Model
-from .kv_pool import KVPool, clear_slot_leaf
+from .kv_pool import BlockPool, KVPool, clear_slot_leaf
 from .sampling import sample
-from .scheduler import FinishedRequest, Request, Scheduler
+from .scheduler import AdmissionPolicy, FinishedRequest, Request, Scheduler
 
 
 @dataclass
@@ -59,19 +68,40 @@ class Engine:
         *,
         glass: Optional[GlassConfig] = None,
         global_prior=None,
-        glass_mode: str = "compact",  # compact | masked
+        glass_mode: str = "compact",  # compact | masked | block_sparse
     ):
         self.model = model
-        self.params = params
-        self.glass = glass
-        self.prior = global_prior
-        self.glass_mode = glass_mode
         # jitted callables keyed by static call signature: repeated generate()
         # calls with the same shapes must NOT re-trace (masks/compact weights
         # are traced arguments, so per-request GLASS state reuses the cache)
         self._jits: Dict[tuple, object] = {}
+        self.params = params  # via the setter: owns _jits invalidation
+        self.glass = glass
+        self.prior = global_prior
+        self.glass_mode = glass_mode
         if glass is not None:
             assert global_prior is not None, "GLASS needs the offline prior"
+        if glass_mode == "block_sparse":
+            assert glass is None or glass.selection == "block", \
+                "block_sparse mode needs block-structured selection"
+        if glass is not None and glass_mode == "compact" and glass.selection == "block":
+            raise ValueError(
+                "block selection yields block ids, not unit indices — "
+                "use glass_mode='masked' or 'block_sparse' with it"
+            )
+
+    @property
+    def params(self):
+        return self._params
+
+    @params.setter
+    def params(self, new):
+        # evict the jit cache when the weights change identity: entries are
+        # keyed only on call signature, so a stale executable could otherwise
+        # keep serving donated/retained buffers from the previous weights
+        if new is not getattr(self, "_params", None):
+            self._jits.clear()
+        self._params = new
 
     def _prefill_fn(self, B: int, S: int, max_len: int):
         key = ("prefill", B, S, max_len)
@@ -86,18 +116,21 @@ class Engine:
         if key not in self._jits:
             model = self.model
 
+            bsz = self.glass.block_size if self.glass is not None else 128
+
             def pick(r, lg):
                 if temperature <= 0.0:
                     return jnp.argmax(lg, axis=-1).astype(jnp.int32)
                 return sample(r, lg, temperature=temperature, top_k=top_k).astype(jnp.int32)
 
-            def decode_loop(params, cache, first_tok, rng, ffn_masks, compact):
+            def decode_loop(params, cache, first_tok, rng, ffn_masks, compact, block_idx):
                 def body(carry, i):
                     cache, tok, rng = carry
                     rng, krng = jax.random.split(rng)
                     lg, cache = model.decode_step(
                         params, tok[:, None], cache, S + i,
                         ffn_masks=ffn_masks, compact_layers=compact,
+                        ffn_block_idx=block_idx, ffn_block_size=bsz,
                     )
                     nxt = pick(krng, lg[:, -1].astype(jnp.float32))
                     return (cache, nxt, rng), (nxt, lg[:, -1] if return_logits else jnp.zeros((B, 0)))
@@ -127,10 +160,13 @@ class Engine:
         masks = None
         compact = None
         ffn_masks = None
+        block_idx = None
         if self.glass is not None:
             masks = build_masks(stats, self.prior, self.glass)
             if self.glass_mode == "compact":
                 compact = compact_params(model, params, masks.idx)
+            elif self.glass_mode == "block_sparse":
+                block_idx = masks.idx  # (L, nb_keep) active block ids
             else:
                 ffn_masks = masks.mask
 
@@ -142,7 +178,7 @@ class Engine:
             first = sample(krng, logits[:, -1].astype(jnp.float32),
                            temperature=temperature, top_k=top_k).astype(jnp.int32)
         decode_loop = self._decode_fn(B, S, max_new, temperature, top_k, return_logits)
-        toks, lgs = decode_loop(params, cache, first, rng, ffn_masks, compact)
+        toks, lgs = decode_loop(params, cache, first, rng, ffn_masks, compact, block_idx)
         out_tokens = np.asarray(jnp.concatenate([first[:, None], toks[:, :-1]], axis=1))
         return GenerationResult(
             tokens=out_tokens,
@@ -169,8 +205,18 @@ class GlassSlotState:
     """
 
     def __init__(self, model: Model, params, gcfg: GlassConfig, prior, mode: str, max_slots: int):
-        if mode not in ("masked", "compact"):
+        if mode not in ("masked", "compact", "block_sparse"):
             raise ValueError(mode)
+        if mode == "block_sparse":
+            if model.cfg.family not in ("dense", "vlm"):
+                raise NotImplementedError("block-sparse decode targets dense-FFN families")
+            if gcfg.selection != "block":
+                raise ValueError("block_sparse mode needs GlassConfig(selection='block')")
+        if mode == "compact" and gcfg.selection == "block":
+            raise ValueError(
+                "block selection yields block ids, not unit indices — "
+                "use glass_mode='masked' or 'block_sparse' with it"
+            )
         self.model = model
         self.params = params
         self.gcfg = gcfg
@@ -200,6 +246,8 @@ class GlassSlotState:
                 # hybrid keeps the (1, B, m) MaskSet layout: rank (not shape)
                 # distinguishes per-slot from the legacy shared (1, m) mask
                 return ms.mask  # (L, B, m) / (L, B, E, f) / hybrid (1, B, m)
+            if mode == "block_sparse":
+                return ms.idx  # (L, B, nb_keep) int32 active block ids
             return compact_params(model, params, ms.idx)
 
         # jitted like KVPool's writers: admission-path mask fusion and
@@ -229,7 +277,74 @@ class GlassSlotState:
         self.arena = self._clear(self.arena, jnp.int32(slot))
 
 
-class ContinuousEngine:
+class _QueueEngineBase:
+    """Shared host-side plumbing for the queue-driven engines: submission,
+    first-token sampling, finish bookkeeping, and the drain loop.
+    Subclasses provide ``step()`` (one tick group) and ``_drain_budget()``
+    (a safe upper bound on ticks to drain the current workload), and may
+    hook ``_on_free`` for extra per-slot teardown."""
+
+    def submit(self, req: Request) -> None:
+        self.scheduler.submit(req)
+
+    @property
+    def n_active(self) -> int:
+        return int(self.pool.active.sum())
+
+    def _first_token(self, logits_last: np.ndarray) -> int:
+        if self.temperature <= 0.0:
+            return int(np.argmax(logits_last))
+        self._rng, krng = jax.random.split(self._rng)
+        return int(
+            sample(krng, jnp.asarray(logits_last)[None], temperature=self.temperature,
+                   top_k=self.top_k)[0]
+        )
+
+    def _on_free(self, slot: int) -> None:
+        pass
+
+    def _finish(self, slot: int, finished: List[FinishedRequest]) -> None:
+        r = self.live[slot]
+        finished.append(
+            FinishedRequest(
+                uid=r.uid,
+                prompt=np.asarray(r.prompt, np.int32),
+                tokens=np.asarray(self.outputs[slot], np.int32),
+                arrival=r.arrival,
+                admitted_step=self.admitted_step[slot],
+                finished_step=self.t,
+            )
+        )
+        self.pool.free(slot)
+        if self.glass_slots is not None:
+            self.glass_slots.clear(slot)
+        self.live[slot] = None
+        self.outputs[slot] = None
+        self.pending[slot] = 0
+        self._on_free(slot)
+
+    def run(self, requests=(), max_steps: Optional[int] = None) -> Dict[int, FinishedRequest]:
+        """Serve until queue and slots drain; returns {uid: FinishedRequest}."""
+        for r in requests:
+            self.submit(r)  # the subclass's validation applies
+        if max_steps is None:
+            queued = list(self.scheduler.queue)
+            live = [r for r in self.live if r is not None]
+            budget = self._drain_budget(queued, live)
+            arrivals = [r.arrival for r in queued] + [0]
+            max_steps = self.t + max(arrivals) + budget + len(queued) + self.pool.max_slots + 8
+        done: Dict[int, FinishedRequest] = {}
+        while len(self.scheduler) or self.pool.active.any():
+            if self.t > max_steps:
+                raise RuntimeError(
+                    f"{type(self).__name__} did not drain in {max_steps} steps"
+                )
+            for f in self.step():
+                done[f.uid] = f
+        return done
+
+
+class ContinuousEngine(_QueueEngineBase):
     """Continuous-batching server: admit-as-slots-free, decode over a fixed
     arena, evict on completion.
 
@@ -288,12 +403,17 @@ class ContinuousEngine:
         # bucketed to powers of two so at most log2(chunk)+1 variants compile.
         self.decode_chunk = max(1, decode_chunk)
 
+        bsz = glass.block_size if glass is not None else 128
+
         def dec(pr, cache, lengths, toks, extra, rng, H):
             kw = {}
             if mode == "masked":
                 kw["ffn_masks"] = extra
             elif mode == "compact":
                 kw["compact_layers"] = extra
+            elif mode == "block_sparse":
+                kw["ffn_block_idx"] = extra
+                kw["ffn_block_size"] = bsz
 
             def body(carry, _):
                 cache, lengths, toks, rng = carry
@@ -317,13 +437,6 @@ class ContinuousEngine:
         self._decode = jax.jit(dec, static_argnums=(6,), donate_argnums=(1,))
 
     # -- public API ---------------------------------------------------------
-
-    def submit(self, req: Request) -> None:
-        self.scheduler.submit(req)
-
-    @property
-    def n_active(self) -> int:
-        return int(self.pool.active.sum())
 
     def _horizon(self) -> int:
         """Largest safe fused-decode length: bounded by the first possible
@@ -380,33 +493,10 @@ class ContinuousEngine:
             self.t = max(self.t + 1, na if na is not None else self.t + 1)
         return finished
 
-    def run(self, requests=(), max_steps: Optional[int] = None) -> Dict[int, FinishedRequest]:
-        """Serve until queue and slots drain; returns {uid: FinishedRequest}."""
-        for r in requests:
-            self.scheduler.submit(r)
-        if max_steps is None:
-            queued = list(self.scheduler.queue)
-            budget = sum(r.max_new for r in queued)
-            budget += sum(r.max_new for r in self.live if r is not None)
-            arrivals = [r.arrival for r in queued] + [0]
-            max_steps = self.t + max(arrivals) + budget + len(queued) + self.pool.max_slots + 8
-        done: Dict[int, FinishedRequest] = {}
-        while len(self.scheduler) or self.pool.active.any():
-            if self.t > max_steps:
-                raise RuntimeError(f"continuous engine did not drain in {max_steps} steps")
-            for f in self.step():
-                done[f.uid] = f
-        return done
+    def _drain_budget(self, queued: List[Request], live: List[Request]) -> int:
+        return sum(r.max_new for r in queued) + sum(r.max_new for r in live)
 
     # -- internals ----------------------------------------------------------
-
-    def _first_token(self, logits_last: np.ndarray) -> int:
-        if self.temperature <= 0.0:
-            return int(np.argmax(logits_last))
-        self._rng, krng = jax.random.split(self._rng)
-        return int(
-            sample(krng, jnp.asarray(logits_last)[None], temperature=self.temperature, top_k=self.top_k)[0]
-        )
 
     def _admit(self, reqs: List[Request], finished: List[FinishedRequest]) -> None:
         slots, stats_list = [], []
@@ -428,21 +518,344 @@ class ContinuousEngine:
             if len(self.outputs[slot]) >= self.live[slot].max_new:
                 self._finish(slot, finished)
 
-    def _finish(self, slot: int, finished: List[FinishedRequest]) -> None:
-        r = self.live[slot]
-        finished.append(
-            FinishedRequest(
-                uid=r.uid,
-                prompt=np.asarray(r.prompt, np.int32),
-                tokens=np.asarray(self.outputs[slot], np.int32),
-                arrival=r.arrival,
-                admitted_step=self.admitted_step[slot],
-                finished_step=self.t,
-            )
+
+# ---------------------------------------------------------------------------
+# Paged continuous batching (block table + chunked prefill)
+# ---------------------------------------------------------------------------
+
+
+def _pow2_bucket(n: int, cap: int) -> int:
+    """Smallest power of two >= n, clamped to [1, cap]."""
+    p = 1
+    while p < n:
+        p *= 2
+    return min(p, cap)
+
+
+class PagedEngine(_QueueEngineBase):
+    """Continuous batching over a paged KV block table with chunked prefill.
+
+    Differences vs :class:`ContinuousEngine` (which is kept as the
+    slot-arena reference — both are greedy-token-identical to single-request
+    serving):
+
+      * **memory** — a :class:`BlockPool`: each request holds
+        ``ceil((len(prompt) + max_new - 1) / block_size)`` KV blocks from a
+        shared pool instead of a private ``max_len`` arena row, so the pool
+        is sized for the *expected total* tokens in flight, not
+        ``max_slots`` worst cases.  Recurrent state stays per-slot.
+      * **prefill** — prompts are processed in chunks of at most
+        ``chunk_tokens`` per engine tick, writing straight into the
+        request's blocks and accumulating GLASS local stats; decode ticks
+        interleave between chunks, so admission never stalls decode for
+        longer than one chunk regardless of prompt length.  The fused mask
+        (and compact weights / block list) is built once, at the final
+        chunk — identical to a single-shot prefill because the stats are
+        running sums.
+      * **decode** — one jitted step over the fixed ``max_slots`` decode
+        batch reading through the block table, with the gather width
+        bucketed to the longest *active* request (powers of two), so
+        short-context phases don't pay ``max_len`` attention.  Free and
+        mid-prefill rows point at the reserved trash block 0 with length 0:
+        their (masked, never-read) writes stay off live blocks.
+      * **admission** — ``AdmissionPolicy`` (FIFO / priority / deadline),
+        best-effort under block availability.
+    """
+
+    def __init__(
+        self,
+        model: Model,
+        params,
+        *,
+        max_slots: int = 8,
+        max_len: int = 256,
+        block_size: int = 16,
+        num_blocks: Optional[int] = None,
+        chunk_tokens: int = 32,
+        glass: Optional[GlassConfig] = None,
+        global_prior=None,
+        glass_mode: str = "compact",  # compact | masked | block_sparse
+        policy: AdmissionPolicy = AdmissionPolicy.FIFO,
+        temperature: float = 0.0,
+        top_k: int = 0,
+        rng: Optional[jax.Array] = None,
+        decode_chunk: int = 8,  # max ticks fused into one jitted scan
+    ):
+        if glass is not None:
+            assert global_prior is not None, "GLASS needs the offline prior"
+        if model.cfg.is_encoder_decoder:
+            raise NotImplementedError("continuous batching targets decoder LMs")
+        if chunk_tokens < 1:
+            raise ValueError(f"chunk_tokens must be >= 1, got {chunk_tokens}")
+        self.model = model
+        self.params = params
+        self.temperature = temperature
+        self.top_k = top_k
+        self.chunk_tokens = chunk_tokens
+        self.pool = BlockPool(model, max_slots, max_len, block_size, num_blocks)
+        self.scheduler = Scheduler(max_len, policy=policy)
+        self.glass = glass
+        self.glass_slots = (
+            GlassSlotState(model, params, glass, global_prior, glass_mode, max_slots)
+            if glass is not None
+            else None
         )
-        self.pool.free(slot)
-        if self.glass_slots is not None:
-            self.glass_slots.clear(slot)
-        self.live[slot] = None
-        self.outputs[slot] = None
-        self.pending[slot] = 0
+        self.pending = np.zeros((max_slots,), np.int32)  # next token to feed, per slot
+        self.outputs: List[Optional[List[int]]] = [None] * max_slots
+        self.live: List[Optional[Request]] = [None] * max_slots
+        self.admitted_step = [0] * max_slots
+        # prompt tokens already prefilled; -1 = prefill done, slot decoding
+        self.prefill_pos = np.full((max_slots,), -1, np.int32)
+        self._pstats: List[Optional[object]] = [None] * max_slots
+        self.t = 0
+        self.slot_steps = 0  # decode ticks x decoding slots (scheduling telemetry)
+        self.kv_row_ticks = 0  # allocated KV rows x ticks (memory telemetry)
+        self.max_prefill_tokens_per_tick = 0
+        self.decode_chunk = max(1, decode_chunk)
+        self._rng = rng if rng is not None else jax.random.key(0)
+
+        mode = self.glass_slots.mode if self.glass_slots is not None else None
+        self._mode = mode
+        bsz = glass.block_size if glass is not None else 128
+        has_paged = self.pool.has_paged
+        axes_t, paged_t = self.pool.axes, self.pool.paged
+        has_state = not all(jax.tree.leaves(self.pool.paged))
+
+        def dec(pr, arena, lengths, toks, btab, dmask, extra, rng, H):
+            kw = {}
+            if mode == "masked":
+                kw["ffn_masks"] = extra
+            elif mode == "compact":
+                kw["compact_layers"] = extra
+            elif mode == "block_sparse":
+                kw["ffn_block_idx"] = extra
+                kw["ffn_block_size"] = bsz
+            if has_paged:
+                kw["block_table"] = btab
+
+            def guard(old, new, ax, pg):
+                # recurrent-state rows of non-decoding slots (free, or holding
+                # a mid-prefill request whose state IS the live prefill carry)
+                # must not absorb the dummy-token recurrence; paged KV writes
+                # are already scoped to live blocks by the trash-block table
+                if pg:
+                    return new
+                m = dmask.reshape((1,) * ax + (-1,) + (1,) * (old.ndim - ax - 1))
+                return jnp.where(m, new, old)
+
+            def body(carry, _):
+                arena, lengths, toks, rng = carry
+                lg, new = model.decode_step(pr, toks[:, None], arena, lengths, **kw)
+                arena = jax.tree.map(guard, arena, new, axes_t, paged_t) if has_state else new
+                lg = lg[:, -1].astype(jnp.float32)
+                rng, krng = jax.random.split(rng)
+                if temperature > 0.0:
+                    nxt = sample(krng, lg, temperature=temperature, top_k=top_k)
+                else:
+                    nxt = jnp.argmax(lg, axis=-1)
+                nxt = nxt.astype(jnp.int32)
+                return (arena, lengths + 1, nxt, rng), nxt
+
+            (arena, _, _, rng), seq = jax.lax.scan(
+                body, (arena, lengths, toks, rng), None, length=H
+            )
+            return seq, arena, rng  # seq (H, B)
+
+        # the arena is dead after each call — donate so the block pool (and
+        # state rows) update in place instead of copying every tick
+        self._decode = jax.jit(dec, static_argnums=(8,), donate_argnums=(1,))
+
+        axes, paged = self.pool.axes, self.pool.paged
+
+        def chunk(pr, arena, toks, clen, btab, slot):
+            # state leaves: slice this slot's rows out of the arena; paged
+            # leaves pass through whole (the block table scopes the access)
+            def take(a, ax, pg):
+                return a if pg else jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=ax)
+
+            rows = jax.tree.map(take, arena, axes, paged)
+            logits, new, stats = model.prefill_chunk(
+                pr, toks, rows, clen, block_table=btab if has_paged else None
+            )
+
+            def put(a, n, ax, pg):
+                if pg:
+                    return n
+                starts = [jnp.int32(0)] * a.ndim
+                starts[ax] = slot
+                return jax.lax.dynamic_update_slice(a, n.astype(a.dtype), starts)
+
+            arena = jax.tree.map(put, arena, new, axes, paged)
+            return logits[:, -1], arena, stats
+
+        self._chunk = jax.jit(chunk, donate_argnums=(1,))
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        need = self.pool.blocks_needed(self._rows_needed(req))
+        if self.pool.has_paged and need > self.pool.num_blocks - 1:
+            raise ValueError(
+                f"request {req.uid} needs {need} blocks > pool capacity "
+                f"{self.pool.num_blocks - 1}"
+            )
+        super().submit(req)
+
+    def _drain_budget(self, queued: List[Request], live: List[Request]) -> int:
+        chunks = self.chunk_tokens
+        return sum(r.max_new + -(-len(r.prompt) // chunks) for r in queued + live)
+
+    def _rows_needed(self, r: Request) -> int:
+        return len(r.prompt) + r.max_new - 1
+
+    def _decoding(self) -> np.ndarray:
+        return np.nonzero(self.pool.active & (self.prefill_pos < 0))[0]
+
+    def _prefilling(self) -> List[int]:
+        return [int(s) for s in np.nonzero(self.pool.active & (self.prefill_pos >= 0))[0]]
+
+    # -- internals ----------------------------------------------------------
+
+    def _admit(self) -> None:
+        while self.pool.n_free_slots:
+            got = self.scheduler.pop_admissible(
+                self.t, 1, fits=lambda r: self.pool.fits(self._rows_needed(r))
+            )
+            if not got:
+                return
+            r = got[0]
+            slot = self.pool.admit(self._rows_needed(r))
+            assert slot is not None  # fits() held and a slot was free
+            self.live[slot] = r
+            self.outputs[slot] = None
+            self.pending[slot] = 0
+            self.prefill_pos[slot] = 0
+            self._pstats[slot] = None
+            self.admitted_step[slot] = self.t
+
+    def _prefill_tick(self, finished: List[FinishedRequest]) -> bool:
+        """Run ONE bounded chunk for the oldest mid-prefill request."""
+        pre = self._prefilling()
+        if not pre:
+            return False
+        slot = min(pre, key=lambda s: (self.admitted_step[s], s))
+        r = self.live[slot]
+        pos = int(self.prefill_pos[slot])
+        T = min(self.chunk_tokens, len(r.prompt) - pos)
+        toks = jnp.asarray(np.asarray(r.prompt[pos : pos + T], np.int32))[None]
+        # gather width covers the *prefilled prefix* (every page written so
+        # far plus this chunk), not the request's full allocation — early
+        # chunks of a long-generation request must not attend max_len rows
+        nb = _pow2_bucket(-(-(pos + T) // self.pool.block_size), self.pool.nb_max)
+        btab = jnp.asarray(self.pool.block_table[slot : slot + 1, :nb])
+        last, arena, stats = self._chunk(
+            self.params, self.pool.cache, toks, jnp.asarray([pos], jnp.int32),
+            btab, jnp.int32(slot),
+        )
+        self.pool.cache = arena
+        self.pool.lengths[slot] = pos + T
+        self.prefill_pos[slot] = pos + T
+        self._pstats[slot] = (
+            stats if self._pstats[slot] is None
+            else jax.tree.map(lambda a, b: a + b, self._pstats[slot], stats)
+        )
+        self.max_prefill_tokens_per_tick = max(self.max_prefill_tokens_per_tick, T)
+        if pos + T == len(r.prompt):  # final chunk: finalize GLASS + first token
+            if self.glass_slots is not None:
+                self.glass_slots.admit([slot], [self._pstats[slot]])
+            self._pstats[slot] = None
+            first = self._first_token(np.asarray(last[0], np.float32))
+            self.outputs[slot] = [first]
+            self.pending[slot] = first
+            self.prefill_pos[slot] = -1
+            if len(self.outputs[slot]) >= r.max_new:
+                self._finish(slot, finished)
+        return True
+
+    def _horizon(self, prefill_pending: bool) -> int:
+        """Largest safe fused-decode length: 1 while any prefill is pending
+        (chunks must interleave), else bounded by the first possible eviction
+        and — when capacity could accept it — the next queued arrival."""
+        if prefill_pending:
+            return 1
+        dec = self._decoding()
+        h = min(self.live[int(s)].max_new - len(self.outputs[int(s)]) for s in dec)
+        if self.pool.n_free_slots and len(self.scheduler):
+            # only arrivals that could actually be admitted bound the chunk:
+            # an arrived-but-unfitting request (block pressure) can only be
+            # admitted after an eviction, and h is already bounded by the
+            # first eviction — clamping on it would degrade decode to H=1
+            na = min(
+                (r.arrival for r in self.scheduler.queue
+                 if self.pool.fits(self._rows_needed(r))),
+                default=None,
+            )
+            if na is not None:
+                h = min(h, max(1, na - self.t))
+        h = min(h, self.decode_chunk)
+        p = 1
+        while p * 2 <= h:
+            p *= 2
+        return p
+
+    def _decode_tick(self, finished: List[FinishedRequest], prefill_pending: bool) -> bool:
+        dec = self._decoding()
+        if dec.size == 0:
+            return False
+        H = self._horizon(prefill_pending)
+        decoding = np.zeros((self.pool.max_slots,), bool)
+        decoding[dec] = True
+        lengths = np.where(decoding, self.pool.lengths, 0).astype(np.int32)
+        toks = np.where(decoding, self.pending, 0).astype(np.int32)
+        if self.pool.has_paged:
+            need = int(max(lengths[s] + H for s in dec))
+            nb = _pow2_bucket(-(-need // self.pool.block_size), self.pool.nb_max)
+            btab = np.where(
+                decoding[:, None], self.pool.block_table[:, :nb], 0
+            ).astype(np.int32)
+        else:
+            btab = np.zeros((self.pool.max_slots, 1), np.int32)
+        extra = self.glass_slots.arena if self.glass_slots is not None else None
+        seq, arena, self._rng = self._decode(
+            self.params, self.pool.cache, jnp.asarray(lengths), jnp.asarray(toks),
+            jnp.asarray(btab), jnp.asarray(decoding), extra, self._rng, H,
+        )
+        self.pool.cache = arena
+        seq = np.asarray(seq)  # (H, B)
+        self.slot_steps += H * int(dec.size)
+        for s in dec:
+            s = int(s)
+            self.pool.lengths[s] += H
+            self.outputs[s].extend(int(x) for x in seq[:, s])
+            self.pending[s] = seq[-1, s]
+            if len(self.outputs[s]) >= self.live[s].max_new:
+                self._finish(s, finished)
+        self.t += H
+        return True
+
+    def step(self) -> List[FinishedRequest]:
+        """One engine tick group: admit (policy order, best-effort under
+        block availability), run at most one bounded prefill chunk, then
+        decode the largest provably safe fused chunk."""
+        finished: List[FinishedRequest] = []
+        t0 = self.t
+        self._admit()
+        prefilled = self._prefill_tick(finished)
+        self._admit()  # a finished max_new==1 request may have freed capacity
+        # memory telemetry: blocks held by every in-flight request (decoding
+        # AND mid-prefill) integrate over every tick this step advances
+        rows_now = self.pool.blocks_in_use * self.pool.block_size
+        prefill_pending = bool(self._prefilling())
+        decoded = self._decode_tick(finished, prefill_pending or prefilled)
+        if not decoded:
+            if prefilled:
+                self.t += 1
+            else:
+                na = self.scheduler.next_arrival()
+                self.t = max(self.t + 1, na if na is not None else self.t + 1)
+        self.kv_row_ticks += (self.t - t0) * rows_now
+        return finished
+
+    def _on_free(self, slot: int) -> None:
+        self.prefill_pos[slot] = -1
+        self._pstats[slot] = None

@@ -1,27 +1,39 @@
-"""Slot-based KV-cache pool for continuous batching.
+"""KV-cache pools for continuous batching: slot arena and paged block table.
 
-The pool owns ONE fixed cache arena allocated via ``model.init_cache``
-with batch = ``max_slots`` and sequence capacity = ``max_len``.  Each slot
-holds one in-flight request; decode always runs over the full arena, so the
-decode step compiles exactly once regardless of which requests come and go.
-Correctness across slots relies on two invariants:
+``KVPool`` (PR 1) owns ONE fixed cache arena allocated via
+``model.init_cache`` with batch = ``max_slots`` and sequence capacity =
+``max_len``: every request pays for the worst-case context.  It is kept as
+the reference memory subsystem for ``ContinuousEngine``.
 
-  * every attention read is masked by the slot's own length (``kv_len`` in
-    ``causal_window_mask``), so stale KV beyond a slot's frontier — from a
-    previous occupant or from the zero-init — is never attended;
-  * recurrent state (rwkv/mamba) is fully overwritten on admission and
+``BlockPool`` is the paged refactor used by ``PagedEngine``: KV rows live in
+fixed-size *blocks* shared by all requests, each request holds a *block
+table* (list of block ids in logical order), and a request's footprint is
+``ceil(rows / block_size)`` blocks instead of ``max_len`` rows.  Recurrent
+state (rwkv/mamba/conv) has no sequence axis and stays a per-slot arena.
+
+Correctness across requests relies on the same two invariants as the slot
+arena:
+
+  * every attention read is masked by the request's own length (``kv_len``
+    in ``causal_window_mask``), so stale KV beyond a request's frontier —
+    from a block's previous owner or from the zero-init — is never attended;
+  * recurrent state is fully overwritten during (chunked) prefill and
     zeroed on eviction, so state families cannot leak either.
 
-Admission inserts a freshly prefilled single-request cache (batch 1, length
-= the prompt length) into the slot's row.  The slot axis of every cache leaf
-is *discovered*, not hard-coded: we diff ``eval_shape`` of ``init_cache``
-for batch 1 vs batch 2, which keeps the pool family-agnostic (dense KV
-stacks, rwkv state tuples, hybrid mamba+KV mixtures) and robust to new
-cache layouts.
+Cache-leaf layout is *discovered*, not hard-coded: diffing ``eval_shape`` of
+``init_cache`` for batch 1 vs 2 finds the slot axis of every leaf, and
+diffing ``max_len`` vs ``2 * max_len`` finds the sequence axis of the leaves
+that have one (the *paged* leaves).  That keeps both pools family-agnostic
+(dense KV stacks, rwkv state tuples, hybrid mamba+KV mixtures) and robust to
+new cache layouts.
+
+Block id 0 is a reserved *trash block*: inactive rows of the fixed-size
+decode batch point their (masked, never-read) writes at it, so the jitted
+decode step needs no per-row branching.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -108,3 +120,196 @@ class KVPool:
         self.lengths[slot] = 0
         self.active[slot] = False
         self._free.append(slot)
+
+
+# ---------------------------------------------------------------------------
+# Paged block table
+# ---------------------------------------------------------------------------
+
+
+class BlockAllocator:
+    """Free-list allocator over block ids ``1..num_blocks-1`` (0 = trash).
+
+    Host-side and strict: double-frees and foreign ids raise instead of
+    silently corrupting the table (a stale free would hand one block to two
+    live requests — the exact cross-request KV leak the pool must prevent).
+    """
+
+    TRASH = 0
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (1 usable + trash), got {num_blocks}")
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(1, num_blocks))[::-1]  # pop() -> block 1 first
+        self._live: set = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        return len(self._live)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n blocks, or None (allocation is all-or-nothing)."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self._live.update(out)
+        return out
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            if b not in self._live:
+                raise ValueError(f"double-free or foreign block id {b}")
+            self._live.remove(b)
+            self._free.append(b)
+
+
+def paged_layout(model, max_len: int):
+    """Discover (slot_axis, seq_axis-or-None) per cache leaf via eval_shape.
+
+    Returns (axes, seq_axes, paged): pytrees matching the cache structure
+    with int leaves — ``paged`` uses 1/0 (python bools/ints keep tree.map
+    happy where None would not)."""
+    axes = slot_axes(model, max_len)
+    c1 = jax.eval_shape(lambda: model.init_cache(1, max_len))
+    c2 = jax.eval_shape(lambda: model.init_cache(1, 2 * max_len))
+
+    def seq_ax(a, b) -> int:
+        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+            if x != y:
+                return i
+        return -1  # state leaf: no sequence axis
+
+    seq_axes = jax.tree.map(seq_ax, c1, c2)
+    paged = jax.tree.map(lambda s: int(s >= 0), seq_axes)
+    return axes, seq_axes, paged
+
+
+class BlockPool:
+    """Paged KV block table + per-slot state arena.
+
+    Paged leaves replace their ``(batch, seq)`` axis pair with
+    ``(num_blocks, block_size)``; a request's KV rows live at logical
+    position ``t`` in block ``table[t // block_size]``, offset
+    ``t % block_size``.  State leaves (rwkv/mamba) keep a ``max_slots``
+    slot arena exactly like :class:`KVPool`.
+
+    The pool only manages memory: block tables, the free lists, and the
+    arena buffers.  All device writes happen inside the engine's jitted
+    chunk-prefill / decode calls (which receive the arena donated), so the
+    pool never dispatches per-token work.
+    """
+
+    def __init__(
+        self,
+        model,
+        max_slots: int,
+        max_len: int,
+        block_size: int = 16,
+        num_blocks: Optional[int] = None,
+    ):
+        self.model = model
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.block_size = block_size
+        self.nb_max = -(-max_len // block_size)  # blocks per request, worst case
+        if num_blocks is None:
+            num_blocks = max_slots * self.nb_max + 1  # worst case + trash
+        self.num_blocks = num_blocks
+        self.axes, self.seq_axes, self.paged = paged_layout(model, max_len)
+        self.has_paged = any(jax.tree.leaves(self.paged))
+
+        c1 = jax.eval_shape(lambda: model.init_cache(1, max_len))
+
+        def arena_shape(leaf, slot_ax, seq_ax, pg):
+            shape = list(leaf.shape)
+            if pg:
+                if seq_ax != slot_ax + 1:
+                    raise ValueError(
+                        f"paged leaf needs adjacent (batch, seq) axes, got "
+                        f"slot={slot_ax} seq={seq_ax} shape={leaf.shape}"
+                    )
+                shape[slot_ax : seq_ax + 1] = [num_blocks, block_size]
+            else:
+                shape[slot_ax] = max_slots
+            return jnp.zeros(shape, leaf.dtype)
+
+        self.cache = jax.tree.map(arena_shape, c1, self.axes, self.seq_axes, self.paged)
+        self.allocator = BlockAllocator(num_blocks) if self.has_paged else None
+        self.block_table = np.zeros((max_slots, self.nb_max), np.int32)  # 0 = trash
+        self.lengths = np.zeros((max_slots,), np.int32)
+        self.active = np.zeros((max_slots,), bool)
+        self._free_slots: List[int] = list(range(max_slots))[::-1]
+        self._held: Dict[int, List[int]] = {}
+        self.peak_blocks = 0
+
+        def clear_state(arena, slot):
+            def one(a, ax, pg):
+                return a if pg else clear_slot_leaf(a, ax, slot)
+
+            return jax.tree.map(one, arena, self.axes, self.paged)
+
+        # eviction hygiene for state rows; paged blocks need no zeroing
+        # (kv_len masking is the correctness mechanism for stale rows)
+        self._clear_state = jax.jit(clear_state, donate_argnums=(0,))
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def n_free_slots(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def n_free_blocks(self) -> int:
+        return self.allocator.n_free if self.allocator else 0
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.allocator.n_live if self.allocator else 0
+
+    def blocks_needed(self, rows: int) -> int:
+        return -(-rows // self.block_size) if self.has_paged else 0
+
+    def fits(self, rows: int) -> bool:
+        return (not self.has_paged) or self.blocks_needed(rows) <= self.n_free_blocks
+
+    # -- request lifecycle --------------------------------------------------
+
+    def admit(self, rows: int) -> Optional[int]:
+        """Allocate a slot + the request's full block need (``rows`` KV
+        rows).  Returns the slot, or None if either resource is exhausted."""
+        if not self._free_slots:
+            return None
+        blocks: List[int] = []
+        if self.has_paged:
+            got = self.allocator.alloc(self.blocks_needed(rows))
+            if got is None:
+                return None
+            blocks = got
+        slot = self._free_slots.pop()
+        self._held[slot] = blocks
+        self.block_table[slot, :] = 0
+        self.block_table[slot, : len(blocks)] = blocks
+        self.lengths[slot] = 0
+        self.active[slot] = True
+        self.peak_blocks = max(self.peak_blocks, self.blocks_in_use)
+        return slot
+
+    def free(self, slot: int) -> None:
+        """Evict: return the slot's blocks, zero its state rows and table."""
+        if not self.active[slot]:
+            raise ValueError(f"slot {slot} is not active")
+        if self._held.get(slot):
+            self.allocator.free(self._held[slot])
+        self._held.pop(slot, None)
+        self.block_table[slot, :] = 0
+        self.lengths[slot] = 0
+        self.active[slot] = False
+        self.cache = self._clear_state(self.cache, jnp.int32(slot))
+        self._free_slots.append(slot)

@@ -1,18 +1,36 @@
-"""Request queue + admission policy for the continuous-batching engine.
+"""Request queue + admission policies for the serving engines.
 
 The scheduler is deliberately host-side and tiny: it tracks arrival times
-(in engine decode-step ticks), validates feasibility against the KV arena,
-and hands out admissible requests FIFO as slots free up.  Everything
-device-side (arena writes, decode) lives in ``engine.ContinuousEngine`` /
-``kv_pool.KVPool``.
+(in engine decode-step ticks), validates feasibility against the KV
+capacity, and hands out admissible requests as capacity frees up under a
+selectable :class:`AdmissionPolicy`:
+
+  * ``FIFO``     — submission order (the PR-1 behavior, still the default);
+  * ``PRIORITY`` — higher ``Request.priority`` first, FIFO within a level;
+  * ``DEADLINE`` — earliest ``Request.deadline`` first (EDF), deadline-less
+    requests last, FIFO among equals.
+
+Admission is *best-effort* under a capacity filter: a request that does not
+currently fit (e.g. not enough free KV blocks) is skipped this tick and
+retried later, so one huge request cannot head-of-line-block small ones.
+Everything device-side (arena/block writes, decode) lives in
+``engine.ContinuousEngine`` / ``engine.PagedEngine`` / ``kv_pool``.
 """
 from __future__ import annotations
 
+import itertools
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, List, Optional
+from enum import Enum
+from typing import Callable, Deque, List, Optional
 
 import numpy as np
+
+
+class AdmissionPolicy(str, Enum):
+    FIFO = "fifo"
+    PRIORITY = "priority"
+    DEADLINE = "deadline"
 
 
 @dataclass
@@ -21,6 +39,8 @@ class Request:
     prompt: np.ndarray  # (S,) int32 token ids
     max_new: int  # number of tokens to generate (incl. the first post-prefill token)
     arrival: int = 0  # engine step at which the request becomes visible
+    priority: int = 0  # larger = more urgent (PRIORITY policy only)
+    deadline: Optional[int] = None  # absolute engine step (DEADLINE policy only)
 
 
 @dataclass
@@ -35,7 +55,7 @@ class FinishedRequest:
 
 @dataclass
 class Scheduler:
-    """FIFO admission with an arena-feasibility check.
+    """Queue + admission with a KV-feasibility check at submit time.
 
     A request needs ``len(prompt) + max_new - 1`` cache rows (the last
     sampled token is returned but never written back), so infeasible
@@ -43,7 +63,9 @@ class Scheduler:
     """
 
     max_len: int
+    policy: AdmissionPolicy = AdmissionPolicy.FIFO
     queue: Deque[Request] = field(default_factory=deque)
+    _seq: "itertools.count" = field(default_factory=itertools.count, repr=False)
 
     def submit(self, req: Request) -> None:
         need = len(req.prompt) + req.max_new - 1
@@ -53,6 +75,7 @@ class Scheduler:
             raise ValueError(
                 f"request {req.uid} needs {need} cache rows > max_len={self.max_len}"
             )
+        req._submit_seq = next(self._seq)  # policy tie-break: submission order
         self.queue.append(req)
 
     def __len__(self) -> int:
@@ -61,20 +84,40 @@ class Scheduler:
     def next_arrival(self) -> Optional[int]:
         return min((r.arrival for r in self.queue), default=None)
 
-    def pop_admissible(self, now: int, k: int) -> List[Request]:
-        """Up to ``k`` arrived requests, FIFO by submission order.
+    def _key(self, r: Request):
+        seq = getattr(r, "_submit_seq", 0)
+        if self.policy is AdmissionPolicy.PRIORITY:
+            return (-r.priority, seq)
+        if self.policy is AdmissionPolicy.DEADLINE:
+            return (r.deadline if r.deadline is not None else np.inf, seq)
+        return (seq,)
+
+    def pop_admissible(
+        self,
+        now: int,
+        k: int,
+        fits: Optional[Callable[[Request], bool]] = None,
+    ) -> List[Request]:
+        """Up to ``k`` arrived requests in policy order.
 
         Not-yet-arrived requests are skipped, not head-of-line blocking:
-        arrivals are wall-clock facts, not priorities."""
+        arrivals are wall-clock facts, not priorities.  ``fits`` (when
+        given) is re-evaluated after every pick so capacity consumed by an
+        earlier pick is visible to later ones; requests that do not fit
+        stay queued for a later tick."""
         out: List[Request] = []
-        if k <= 0:
-            return out
-        rest: Deque[Request] = deque()
-        while self.queue:
-            r = self.queue.popleft()
-            if len(out) < k and r.arrival <= now:
-                out.append(r)
-            else:
-                rest.append(r)
-        self.queue = rest
+        while len(out) < k:
+            best_i = -1
+            for i, r in enumerate(self.queue):
+                if r.arrival > now or (fits is not None and not fits(r)):
+                    continue
+                if best_i < 0 or self._key(r) < self._key(self.queue[best_i]):
+                    best_i = i
+            if best_i < 0:
+                break
+            # removal by index, NOT deque.remove(best): equality-based removal
+            # would invoke the dataclass __eq__, which compares the ndarray
+            # prompt and raises whenever two queued requests share a uid
+            out.append(self.queue[best_i])
+            del self.queue[best_i]
         return out
