@@ -41,6 +41,16 @@ The latency-SLO sweep re-runs continuous vs paged across arrival rates and
 reports p50/p99 completion latency per rate (deterministic in ticks, so no
 warmup needed).
 
+The *pressure* scenario offers arrival rate > pool capacity to a paged
+engine whose block pool is sized well below the worst case, comparing
+``alloc_mode="full"`` (PR-2 full-need admission: requests queue until their
+whole footprint fits) against ``alloc_mode="incremental"`` (allocate on
+block boundaries, preempt with swap/recompute under pressure).  Reported
+per mode: preemption counts (swap / recompute), bytes swapped to host,
+tokens recomputed, admission-latency mean/p50/p99, and completion latency —
+the incremental engine should admit strictly earlier at a modest
+recompute/swap cost.
+
 Tick-accounting caveat: the continuous engine prefills out-of-band (a
 prompt costs zero ticks), while the paged engine charges one tick per
 prefill chunk — so its latency numbers carry an honest admission cost the
@@ -81,6 +91,14 @@ ARRIVAL_RATE = 0.5  # mean requests per decode tick
 SWEEP_RATES = (0.25, 0.5, 1.0)
 GLASS = GlassConfig(density=0.5)
 OUT_JSON = Path(__file__).with_name("BENCH_serve.json")
+
+# pressure scenario: arrivals outrun a deliberately undersized block pool;
+# slots are ample so BLOCKS are the binding constraint (full-need admission
+# can hold ~2.4 worst-case requests, incremental starts one per block)
+PRESSURE_RATE = 2.0
+PRESSURE_REQUESTS = 16
+PRESSURE_SLOTS = 6
+PRESSURE_BLOCKS = 13  # 12 usable: ~2.4 full-need requests' worth
 
 
 def _workload(arrival_rate: float, seed: int = 0) -> List[Request]:
@@ -154,6 +172,75 @@ def _queue_serve(eng, reqs: List[Request]):
     return wall, latencies, eng.slot_steps - ss0, row_ticks
 
 
+def _pressure_workload(seed: int = 2) -> List[Request]:
+    rng = np.random.RandomState(seed)
+    arrivals = np.cumsum(
+        rng.exponential(1.0 / PRESSURE_RATE, size=PRESSURE_REQUESTS)
+    ).astype(int)
+    new = rng.randint(4, 29, size=PRESSURE_REQUESTS)
+    return [
+        Request(
+            uid=i,
+            prompt=rng.randint(3, CFG.vocab_size, size=PROMPT_LEN).astype(np.int32),
+            max_new=int(new[i]),
+            arrival=int(arrivals[i]),
+        )
+        for i in range(PRESSURE_REQUESTS)
+    ]
+
+
+def pressure_scenario(model, params, prior) -> dict:
+    """Arrival rate > capacity: full-need admission vs incremental
+    allocation with swap/recompute preemption, on an undersized pool.
+    Deterministic in ticks; also cross-checks zero token divergence."""
+    reqs = _pressure_workload()
+    rows = {}
+    outs = {}
+    for mode in ("full", "incremental"):
+        eng = PagedEngine(
+            model, params, max_slots=PRESSURE_SLOTS, max_len=MAX_LEN,
+            block_size=BLOCK_SIZE, num_blocks=PRESSURE_BLOCKS,
+            chunk_tokens=CHUNK_TOKENS, glass=GLASS, global_prior=prior,
+            alloc_mode=mode,
+        )
+        done = eng.run([Request(r.uid, r.prompt, r.max_new, r.arrival) for r in reqs])
+        outs[mode] = done
+        waits = np.asarray(eng.admission_waits, np.float64)
+        lat = np.asarray(
+            [f.finished_step - f.arrival for f in done.values()], np.float64
+        )
+        rows[mode] = dict(
+            alloc_mode=mode,
+            preemptions=eng.preempt_count,
+            swaps=eng.lc.preempted(kind="swap"),
+            recomputes=eng.lc.preempted(kind="recompute"),
+            swap_bytes=eng.swap_bytes,
+            recompute_tokens=eng.recompute_tokens,
+            admission_wait_mean=float(waits.mean()),
+            admission_wait_p50=float(np.percentile(waits, 50)),
+            admission_wait_p99=float(np.percentile(waits, 99)),
+            mean_latency_steps=float(lat.mean()),
+            p99_latency_steps=float(np.percentile(lat, 99)),
+            drain_ticks=eng.t,
+        )
+    for r in reqs:  # preemption must not change a single token
+        np.testing.assert_array_equal(
+            outs["full"][r.uid].tokens, outs["incremental"][r.uid].tokens
+        )
+    return dict(
+        config=dict(
+            arrival_rate=PRESSURE_RATE, n_requests=PRESSURE_REQUESTS,
+            num_blocks=PRESSURE_BLOCKS, block_size=BLOCK_SIZE,
+            max_slots=PRESSURE_SLOTS, chunk_tokens=CHUNK_TOKENS,
+        ),
+        modes=list(rows.values()),
+        admission_wait_saving=(
+            rows["full"]["admission_wait_mean"]
+            / max(rows["incremental"]["admission_wait_mean"], 1e-9)
+        ),
+    )
+
+
 def serve_throughput() -> Tuple[List[dict], dict]:
     model = build_model(CFG)
     params = model.init(jax.random.key(0))
@@ -210,6 +297,8 @@ def serve_throughput() -> Tuple[List[dict], dict]:
             _, latencies, _, _ = _queue_serve(eng, wave)
             sweep.append(dict(engine=name, arrival_rate=rate, **_pcts(latencies)))
 
+    pressure = pressure_scenario(model, params, prior)
+
     by = {r["engine"]: r for r in rows}
     headline = dict(
         latency_speedup_continuous_vs_static=(
@@ -234,6 +323,7 @@ def serve_throughput() -> Tuple[List[dict], dict]:
         ),
         engines=rows,
         slo_sweep=sweep,
+        pressure=pressure,
         headline=headline,
     )
 
@@ -264,5 +354,18 @@ if __name__ == "__main__":
             f"  rate={s['arrival_rate']:.2f} {s['engine']:12s} "
             f"p50={s['p50_latency_steps']:7.1f} p99={s['p99_latency_steps']:7.1f}"
         )
+    print("\npressure (arrival rate > pool capacity):")
+    for m in report["pressure"]["modes"]:
+        print(
+            f"  {m['alloc_mode']:12s} admit wait mean={m['admission_wait_mean']:6.1f} "
+            f"p99={m['admission_wait_p99']:6.1f}  preempt={m['preemptions']:2d} "
+            f"(swap {m['swaps']}/rec {m['recomputes']})  "
+            f"swapB={m['swap_bytes']}  recTok={m['recompute_tokens']}  "
+            f"lat mean={m['mean_latency_steps']:6.1f}"
+        )
+    print(
+        f"  incremental admits {report['pressure']['admission_wait_saving']:.2f}x "
+        f"earlier than full-need admission (identical token streams)"
+    )
     OUT_JSON.write_text(json.dumps(report, indent=2) + "\n")
     print(f"\nwrote {OUT_JSON}")

@@ -171,22 +171,41 @@ def make_decode_step_masked(model: Model):
     return decode
 
 
-def make_decode_step_block_sparse(model: Model, block_size: int):
+def make_decode_step_block_sparse(model: Model, block_size: int, groups=None):
     """Block-sparse decode: per-request active FFN block ids (from
     ``GlassConfig(selection="block")``) feed the pallas ``glass_ffn`` kernel
     directly — weights stay resident, only active (d x block_size) tiles are
     streamed.  ``block_idx`` is (L, nb_keep) shared or (L, B, nb_keep)
-    per-slot (continuous batching)."""
+    per-slot (continuous batching).
 
-    def decode(params, cache, token, cache_len, block_idx):
+    ``groups`` (a static tuple of sizes >= 2) lowers the *shared-list
+    batched* variant the paged engine uses when several decode rows carry
+    identical active-block lists: grouped rows run one shared-list kernel
+    per group (weight tiles streamed once per group, not once per row) and
+    the returned step takes an extra ``row_perm`` (B,) argument ordering
+    rows group-major with singletons last."""
+
+    if groups is None:
+        def decode(params, cache, token, cache_len, block_idx):
+            logits, cache = model.decode_step(
+                params, token, cache, cache_len,
+                ffn_block_idx=block_idx, ffn_block_size=block_size,
+            )
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            return nxt, cache
+
+        return decode
+
+    def decode_grouped(params, cache, token, cache_len, block_idx, row_perm):
         logits, cache = model.decode_step(
             params, token, cache, cache_len,
             ffn_block_idx=block_idx, ffn_block_size=block_size,
+            ffn_groups=tuple(groups), ffn_row_perm=row_perm,
         )
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         return nxt, cache
 
-    return decode
+    return decode_grouped
 
 
 def make_chunked_prefill(model: Model, chunk_tokens: int):

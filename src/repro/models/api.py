@@ -130,10 +130,15 @@ class Model:
         block_table=None,  # (B, nb) int32: paged-KV serving (BlockPool)
         ffn_block_idx=None,  # active FFN block ids -> block-sparse pallas kernel
         ffn_block_size: int = 128,
+        ffn_groups=None,  # static tuple: rows sharing a block list, batched
+        # through the shared-list kernel (see dense_decode_step)
+        ffn_row_perm=None,  # (B,) int32 row permutation matching ffn_groups
     ):
         cfg = self.cfg
         if ffn_block_idx is not None and cfg.family not in ("dense", "vlm"):
             raise NotImplementedError("block-sparse decode targets dense-FFN families")
+        if ffn_groups and ffn_block_idx is None:
+            raise ValueError("ffn_groups requires ffn_block_idx (block-sparse decode)")
         if cfg.is_encoder_decoder:
             return encdec.encdec_decode_step(
                 params, token, cache, cache_len, cfg, ffn_masks=ffn_masks, compact_layers=compact_layers
@@ -157,6 +162,7 @@ class Model:
             params, token, cache, cache_len, cfg, ffn_masks=ffn_masks,
             compact_layers=compact_layers, block_table=block_table,
             ffn_block_idx=ffn_block_idx, ffn_block_size=ffn_block_size,
+            ffn_groups=ffn_groups, ffn_row_perm=ffn_row_perm,
         )
 
     def init_cache(self, batch: int, max_len: int):

@@ -367,6 +367,10 @@ def dense_decode_step(
     ffn_block_idx=None,  # (L, nb_keep) shared or (L, B, nb_keep) per-slot active
     # FFN block ids -> block-sparse pallas kernel instead of dense masked matmuls
     ffn_block_size: int = 128,
+    ffn_groups=None,  # STATIC tuple of group sizes (each >= 2): rows whose
+    # per-slot block lists are identical, batched through the shared-list
+    # glass_ffn kernel; remaining rows run rowwise.  Requires ffn_row_perm.
+    ffn_row_perm=None,  # (B,) int32: rows reordered group-major, singletons last
 ):
     """One decode step across all layers (scan). Returns (logits, new_cache)."""
     x = embed_tokens(params, token, cfg)
@@ -398,11 +402,37 @@ def dense_decode_step(
             from ..kernels.ops import glass_ffn, glass_ffn_rowwise
 
             fp = lp["ffn"]
-            kernel = glass_ffn_rowwise if bidx_l.ndim == 2 else glass_ffn
-            y32 = kernel(
-                h2[:, 0], fp["w_up"], fp["w_down"], bidx_l, fp.get("w_gate"),
-                act=cfg.ffn_act, block_size=ffn_block_size,
-            )
+            if bidx_l.ndim == 2 and ffn_groups:
+                # shared-list batching: rows whose active-block lists are
+                # identical share ONE grid over the list (weight tiles are
+                # streamed once per group, not once per row); leftover
+                # singleton rows take the rowwise kernel in a single call
+                xb = h2[:, 0]
+                xp = xb[ffn_row_perm]
+                bp = bidx_l[ffn_row_perm]
+                parts = []
+                off = 0
+                for gs in ffn_groups:
+                    parts.append(glass_ffn(
+                        xp[off : off + gs], fp["w_up"], fp["w_down"],
+                        bp[off], fp.get("w_gate"),
+                        act=cfg.ffn_act, block_size=ffn_block_size,
+                    ))
+                    off += gs
+                if off < xp.shape[0]:
+                    parts.append(glass_ffn_rowwise(
+                        xp[off:], fp["w_up"], fp["w_down"], bp[off:],
+                        fp.get("w_gate"), act=cfg.ffn_act,
+                        block_size=ffn_block_size,
+                    ))
+                yp = jnp.concatenate(parts, axis=0)
+                y32 = jnp.zeros_like(yp).at[ffn_row_perm].set(yp)
+            else:
+                kernel = glass_ffn_rowwise if bidx_l.ndim == 2 else glass_ffn
+                y32 = kernel(
+                    h2[:, 0], fp["w_up"], fp["w_down"], bidx_l, fp.get("w_gate"),
+                    act=cfg.ffn_act, block_size=ffn_block_size,
+                )
             y = y32.astype(x.dtype)[:, None]
         else:
             fp = comp_l if comp_l is not None else lp["ffn"]

@@ -48,7 +48,8 @@ import numpy as np
 from ..core.fusion import GlassConfig
 from ..core.glass import build_masks, compact_params
 from ..models.api import Model
-from .kv_pool import BlockPool, KVPool, clear_slot_leaf
+from .kv_pool import BlockPool, KVPool, clear_slot_leaf, pow2_bucket as _pow2_bucket
+from .lifecycle import Lifecycle, LiveRequest, PreemptionConfig, ReqState, preemption_kind
 from .sampling import sample
 from .scheduler import AdmissionPolicy, FinishedRequest, Request, Scheduler
 
@@ -250,14 +251,24 @@ class GlassSlotState:
                 return ms.idx  # (L, B, nb_keep) int32 active block ids
             return compact_params(model, params, ms.idx)
 
+        def save(arena, slot):
+            return jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=ax), arena
+            )
+
         # jitted like KVPool's writers: admission-path mask fusion and
         # compaction, and slot writes/clears, must not dispatch eagerly; the
         # arena argument is dead after each call, so donate it
         self._rows = jax.jit(rows)
         self._write = jax.jit(write, donate_argnums=(0,))
         self._clear = jax.jit(clear, donate_argnums=(0,))
+        self._save = jax.jit(save)
 
-    def admit(self, slots: List[int], stats_list) -> None:
+    def admit(self, slots: List[int], stats_list):
+        """Fuse stats -> per-slot rows, scatter them into the arena, and
+        return the freshly built rows (slot axis length ``len(slots)``) so
+        the engine can derive host-side keys (e.g. active-block lists for
+        the shared-list kernel grouping) without re-reading the arena."""
         ax = self.slot_axis
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *stats_list)
         rows = self._rows(self.params, self.prior, stacked)
@@ -267,6 +278,19 @@ class GlassSlotState:
                 rows,
             )
         self.arena = self._write(self.arena, rows, jnp.asarray(slots, jnp.int32))
+        return rows
+
+    def save(self, slot: int):
+        """Device copy of the slot's rows (swap-out keeps GLASS state)."""
+        if self.arena is None:
+            return None
+        return self._save(self.arena, jnp.int32(slot))
+
+    def restore(self, slot: int, rows) -> None:
+        """Write back rows captured by :meth:`save` at a (new) slot."""
+        if rows is None:
+            return
+        self.arena = self._write(self.arena, rows, jnp.asarray([slot], jnp.int32))
 
     def clear(self, slot: int) -> None:
         """Zero the slot's row.  A zero mask / zero compact gather makes the
@@ -323,18 +347,24 @@ class _QueueEngineBase:
         self.pending[slot] = 0
         self._on_free(slot)
 
+    def _inflight_requests(self) -> List[Request]:
+        return [r for r in self.live if r is not None]
+
+    def _work_remaining(self) -> bool:
+        return bool(len(self.scheduler) or self.pool.active.any())
+
     def run(self, requests=(), max_steps: Optional[int] = None) -> Dict[int, FinishedRequest]:
         """Serve until queue and slots drain; returns {uid: FinishedRequest}."""
         for r in requests:
             self.submit(r)  # the subclass's validation applies
         if max_steps is None:
             queued = list(self.scheduler.queue)
-            live = [r for r in self.live if r is not None]
+            live = self._inflight_requests()
             budget = self._drain_budget(queued, live)
             arrivals = [r.arrival for r in queued] + [0]
             max_steps = self.t + max(arrivals) + budget + len(queued) + self.pool.max_slots + 8
         done: Dict[int, FinishedRequest] = {}
-        while len(self.scheduler) or self.pool.active.any():
+        while self._work_remaining():
             if self.t > max_steps:
                 raise RuntimeError(
                     f"{type(self).__name__} did not drain in {max_steps} steps"
@@ -524,42 +554,50 @@ class ContinuousEngine(_QueueEngineBase):
 # ---------------------------------------------------------------------------
 
 
-def _pow2_bucket(n: int, cap: int) -> int:
-    """Smallest power of two >= n, clamped to [1, cap]."""
-    p = 1
-    while p < n:
-        p *= 2
-    return min(p, cap)
-
-
 class PagedEngine(_QueueEngineBase):
-    """Continuous batching over a paged KV block table with chunked prefill.
+    """Continuous batching over a paged KV block table, driven by an
+    explicit per-request lifecycle state machine (``serve.lifecycle``).
 
     Differences vs :class:`ContinuousEngine` (which is kept as the
     slot-arena reference — both are greedy-token-identical to single-request
     serving):
 
-      * **memory** — a :class:`BlockPool`: each request holds
-        ``ceil((len(prompt) + max_new - 1) / block_size)`` KV blocks from a
-        shared pool instead of a private ``max_len`` arena row, so the pool
-        is sized for the *expected total* tokens in flight, not
-        ``max_slots`` worst cases.  Recurrent state stays per-slot.
+      * **memory** — a :class:`BlockPool` with *allocate-on-boundary*
+        (``alloc_mode="incremental"``, the default): admission allocates
+        only the first prefill chunk's blocks, and a request grows one
+        block at a time as it crosses block boundaries, with a small
+        watermark reserve kept free for growth.  ``alloc_mode="full"``
+        restores the PR-2 behavior (the request's entire worst-case
+        footprint reserved at admission) for comparison.
+      * **preemption** — when growth fails under pressure, the scheduler
+        picks a victim (lowest priority / latest deadline / newest first)
+        and a cost model picks *swap* (KV blocks copied to a host store,
+        restored bit-identical on swap-in) or *recompute* (blocks dropped,
+        request re-queued; the prompt replays through chunked prefill —
+        running-sum GLASS stats rebuild the identical fused mask — and the
+        generated prefix re-feeds through decode as forced tokens).  Both
+        paths resume with zero token-stream divergence under greedy
+        decoding; with a temperature, replay shifts the engine-global RNG
+        stream, so sampled streams stay deterministic given ``rng`` but
+        are not preemption-transparent (they were never
+        scheduling-transparent either).
       * **prefill** — prompts are processed in chunks of at most
-        ``chunk_tokens`` per engine tick, writing straight into the
-        request's blocks and accumulating GLASS local stats; decode ticks
-        interleave between chunks, so admission never stalls decode for
-        longer than one chunk regardless of prompt length.  The fused mask
-        (and compact weights / block list) is built once, at the final
-        chunk — identical to a single-shot prefill because the stats are
-        running sums.
+        ``chunk_tokens`` per engine tick, interleaved with decode; the
+        fused mask is built once, at the final chunk.
       * **decode** — one jitted step over the fixed ``max_slots`` decode
-        batch reading through the block table, with the gather width
-        bucketed to the longest *active* request (powers of two), so
-        short-context phases don't pay ``max_len`` attention.  Free and
-        mid-prefill rows point at the reserved trash block 0 with length 0:
-        their (masked, never-read) writes stay off live blocks.
+        batch reading through the block table, gather width bucketed to
+        the longest active request.  In ``block_sparse`` mode, rows whose
+        active-block lists coincide are batched through the shared-list
+        ``glass_ffn`` kernel (group-by on the host-side block-id tuples);
+        singleton rows fall back to ``glass_ffn_rowwise``.
       * **admission** — ``AdmissionPolicy`` (FIFO / priority / deadline),
-        best-effort under block availability.
+        best-effort under block availability net of the watermark reserve
+        and the blocks owed to swapped-out requests awaiting swap-in.
+
+    ``PagedEngine.step`` itself is a thin driver: each tick it asks the
+    lifecycle for this tick's swap-in, admission, prefill, and decode
+    work, in that order; all resource movement happens inside the state
+    transitions.
     """
 
     def __init__(
@@ -576,6 +614,8 @@ class PagedEngine(_QueueEngineBase):
         global_prior=None,
         glass_mode: str = "compact",  # compact | masked | block_sparse
         policy: AdmissionPolicy = AdmissionPolicy.FIFO,
+        alloc_mode: str = "incremental",  # incremental | full
+        preemption: Optional[PreemptionConfig] = None,
         temperature: float = 0.0,
         top_k: int = 0,
         rng: Optional[jax.Array] = None,
@@ -587,12 +627,18 @@ class PagedEngine(_QueueEngineBase):
             raise NotImplementedError("continuous batching targets decoder LMs")
         if chunk_tokens < 1:
             raise ValueError(f"chunk_tokens must be >= 1, got {chunk_tokens}")
+        if alloc_mode not in ("incremental", "full"):
+            raise ValueError(f"unknown alloc_mode {alloc_mode!r}")
         self.model = model
         self.params = params
         self.temperature = temperature
         self.top_k = top_k
         self.chunk_tokens = chunk_tokens
-        self.pool = BlockPool(model, max_slots, max_len, block_size, num_blocks)
+        self.alloc_mode = alloc_mode
+        self.preempt_cfg = preemption if preemption is not None else PreemptionConfig()
+        watermark = self.preempt_cfg.watermark_blocks if alloc_mode == "incremental" else 0
+        self.pool = BlockPool(model, max_slots, max_len, block_size, num_blocks,
+                              watermark=watermark)
         self.scheduler = Scheduler(max_len, policy=policy)
         self.glass = glass
         self.glass_slots = (
@@ -600,17 +646,17 @@ class PagedEngine(_QueueEngineBase):
             if glass is not None
             else None
         )
-        self.pending = np.zeros((max_slots,), np.int32)  # next token to feed, per slot
-        self.outputs: List[Optional[List[int]]] = [None] * max_slots
-        self.live: List[Optional[Request]] = [None] * max_slots
-        self.admitted_step = [0] * max_slots
-        # prompt tokens already prefilled; -1 = prefill done, slot decoding
-        self.prefill_pos = np.full((max_slots,), -1, np.int32)
-        self._pstats: List[Optional[object]] = [None] * max_slots
+        self.lc = Lifecycle()
         self.t = 0
         self.slot_steps = 0  # decode ticks x decoding slots (scheduling telemetry)
         self.kv_row_ticks = 0  # allocated KV rows x ticks (memory telemetry)
         self.max_prefill_tokens_per_tick = 0
+        # preemption / admission telemetry
+        self.swap_bytes = 0  # bytes copied device -> host by swap-outs
+        self.swap_ins = 0
+        self.recompute_tokens = 0  # tokens dropped by recompute preemptions
+        self.grouped_rows = 0  # decode row-ticks served by the shared-list kernel
+        self.admission_waits: List[int] = []  # first-admission latency per request
         self.decode_chunk = max(1, decode_chunk)
         self._rng = rng if rng is not None else jax.random.key(0)
 
@@ -621,7 +667,10 @@ class PagedEngine(_QueueEngineBase):
         axes_t, paged_t = self.pool.axes, self.pool.paged
         has_state = not all(jax.tree.leaves(self.pool.paged))
 
-        def dec(pr, arena, lengths, toks, btab, dmask, extra, rng, H):
+        # the fused horizon H is carried by the (H, B) leading axis of
+        # ftoks/fmask — the scan length and the per-H jit variants key off
+        # that shape, so no separate static argument is needed
+        def dec(pr, arena, lengths, toks, btab, dmask, extra, ftoks, fmask, perm, rng, groups):
             kw = {}
             if mode == "masked":
                 kw["ffn_masks"] = extra
@@ -630,6 +679,9 @@ class PagedEngine(_QueueEngineBase):
             elif mode == "block_sparse":
                 kw["ffn_block_idx"] = extra
                 kw["ffn_block_size"] = bsz
+                if groups:  # shared-list batching: rows with identical lists
+                    kw["ffn_groups"] = groups
+                    kw["ffn_row_perm"] = perm
             if has_paged:
                 kw["block_table"] = btab
 
@@ -643,7 +695,8 @@ class PagedEngine(_QueueEngineBase):
                 m = dmask.reshape((1,) * ax + (-1,) + (1,) * (old.ndim - ax - 1))
                 return jnp.where(m, new, old)
 
-            def body(carry, _):
+            def body(carry, xs):
+                ft, fm = xs
                 arena, lengths, toks, rng = carry
                 lg, new = model.decode_step(pr, toks[:, None], arena, lengths, **kw)
                 arena = jax.tree.map(guard, arena, new, axes_t, paged_t) if has_state else new
@@ -654,16 +707,19 @@ class PagedEngine(_QueueEngineBase):
                 else:
                     nxt = jnp.argmax(lg, axis=-1)
                 nxt = nxt.astype(jnp.int32)
+                # recompute replay: re-feed the recorded token instead of the
+                # sampled one — KV rebuilds bit-identical, no new sampling
+                nxt = jnp.where(fm, ft, nxt)
                 return (arena, lengths + 1, nxt, rng), nxt
 
             (arena, _, _, rng), seq = jax.lax.scan(
-                body, (arena, lengths, toks, rng), None, length=H
+                body, (arena, lengths, toks, rng), (ftoks, fmask)
             )
             return seq, arena, rng  # seq (H, B)
 
         # the arena is dead after each call — donate so the block pool (and
         # state rows) update in place instead of copying every tick
-        self._decode = jax.jit(dec, static_argnums=(8,), donate_argnums=(1,))
+        self._decode = jax.jit(dec, static_argnums=(11,), donate_argnums=(1,))
 
         axes, paged = self.pool.axes, self.pool.paged
 
@@ -699,49 +755,206 @@ class PagedEngine(_QueueEngineBase):
                 f"request {req.uid} needs {need} blocks > pool capacity "
                 f"{self.pool.num_blocks - 1}"
             )
+        # uids key the lifecycle entries, so a resubmission while the first
+        # request is still queued or in flight must fail HERE, not crash at
+        # admission (entries exist only from admission on, hence both checks)
+        if req.uid in self.lc.entries or any(q.uid == req.uid for q in self.scheduler.queue):
+            raise ValueError(f"request uid {req.uid} is already in flight")
         super().submit(req)
+
+    @property
+    def preempt_count(self) -> int:
+        return self.lc.preempted()
 
     def _drain_budget(self, queued: List[Request], live: List[Request]) -> int:
         chunks = self.chunk_tokens
-        return sum(r.max_new + -(-len(r.prompt) // chunks) for r in queued + live)
+        base = sum(r.max_new + -(-len(r.prompt) // chunks) for r in queued + live)
+        # preemption headroom: every swap/recompute round re-pays prefill
+        # chunks and forced re-feeds; progress is still guaranteed (the
+        # non-victim advances every tick) so a small multiple suffices
+        return base * 4 + 16
+
+    def _inflight_requests(self) -> List[Request]:
+        return [
+            e.req
+            for e in self.lc.in_state(
+                ReqState.PREFILLING, ReqState.RUNNING,
+                ReqState.PREEMPTED_SWAPPED, ReqState.PREEMPTED_RECOMPUTE,
+            )
+        ]
+
+    def _work_remaining(self) -> bool:
+        return bool(
+            len(self.scheduler)
+            or self.pool.active.any()
+            or self.lc.in_state(ReqState.PREEMPTED_SWAPPED)
+        )
 
     def _rows_needed(self, r: Request) -> int:
         return len(r.prompt) + r.max_new - 1
 
-    def _decoding(self) -> np.ndarray:
-        return np.nonzero(self.pool.active & (self.prefill_pos < 0))[0]
+    def _first_rows(self, r: Request) -> int:
+        """Rows to allocate at admission: the first prefill chunk under
+        incremental allocation, the full worst case under ``full``."""
+        if self.alloc_mode == "full":
+            return self._rows_needed(r)
+        return min(self.chunk_tokens, len(r.prompt))
 
-    def _prefilling(self) -> List[int]:
-        return [int(s) for s in np.nonzero(self.pool.active & (self.prefill_pos >= 0))[0]]
+    def _fits(self, r: Request) -> bool:
+        """Admission filter (satellite fix): under incremental allocation a
+        request fits when its *first-chunk* blocks fit net of the watermark
+        reserve and the blocks owed to swapped-out requests awaiting
+        swap-in — not its full static need, which over-rejects, but also
+        not raw free blocks, which would over-commit the pool."""
+        if not self.pool.has_paged:
+            return True
+        if self.alloc_mode == "full":
+            return self.pool.fits(self._rows_needed(r))
+        reserved = sum(e.swap.n_blocks for e in self.lc.in_state(ReqState.PREEMPTED_SWAPPED))
+        return self.pool.fits_admission(self._first_rows(r), reserved)
 
-    # -- internals ----------------------------------------------------------
+    # -- lifecycle transitions ----------------------------------------------
 
-    def _admit(self) -> None:
-        while self.pool.n_free_slots:
-            got = self.scheduler.pop_admissible(
-                self.t, 1, fits=lambda r: self.pool.fits(self._rows_needed(r))
+    def _finish(self, slot: int, finished: List[FinishedRequest]) -> None:
+        e = self.lc.by_slot(slot)
+        finished.append(
+            FinishedRequest(
+                uid=e.uid,
+                prompt=np.asarray(e.req.prompt, np.int32),
+                tokens=np.asarray(e.outputs, np.int32),
+                arrival=e.req.arrival,
+                admitted_step=e.first_admitted_step,
+                finished_step=self.t,
             )
+        )
+        self.pool.free(slot)
+        if self.glass_slots is not None:
+            self.glass_slots.clear(slot)
+        self.lc.to(e, ReqState.FINISHED)
+        e.slot = -1
+        e.pstats = None
+
+    def _preempt(self, e: LiveRequest, kind: Optional[str] = None) -> None:
+        """RUNNING/PREFILLING -> PREEMPTED_{SWAPPED,RECOMPUTE}: release the
+        slot and its blocks; swap keeps a bit-exact host copy, recompute
+        re-queues for a prompt+prefix replay."""
+        slot = e.slot
+        if e.state is ReqState.PREFILLING:
+            kind = "recompute"  # partial prefill: replaying is strictly cheaper
+        if kind is None:
+            kind = preemption_kind(
+                self.preempt_cfg,
+                self.pool.held_blocks(slot),
+                int(self.pool.lengths[slot]),
+            )
+        e.preemptions += 1
+        if kind == "swap":
+            if self.glass_slots is not None:
+                e.glass_rows = self.glass_slots.save(slot)
+                self.glass_slots.clear(slot)
+            e.swap = self.pool.swap_out(slot)
+            self.swap_bytes += e.swap.nbytes
+            self.lc.to(e, ReqState.PREEMPTED_SWAPPED)
+        else:
+            # tokens whose computation is dropped and must be replayed
+            # (prompt progress + generated prefix written so far)
+            self.recompute_tokens += int(self.pool.lengths[slot])
+            if self.glass_slots is not None:
+                self.glass_slots.clear(slot)
+            self.pool.free(slot)
+            e.pstats = None
+            e.prefill_pos = 0
+            e.glass_key = None
+            e.replay_left = 0
+            self.lc.to(e, ReqState.PREEMPTED_RECOMPUTE)
+            self.scheduler.requeue(e.req)
+        e.slot = -1
+
+    def _preempt_for_capacity(self, protect: Optional[LiveRequest] = None) -> bool:
+        """Pick one victim (scheduler policy, mirror of admission order)
+        and preempt it.  Returns False when no victim is available."""
+        victims = [
+            v for v in self.lc.in_state(ReqState.RUNNING, ReqState.PREFILLING)
+            if v is not protect
+        ]
+        vr = self.scheduler.select_victim([v.req for v in victims])
+        if vr is None:
+            return False
+        self._preempt(next(v for v in victims if v.req is vr))
+        return True
+
+    def _swap_in_tick(self) -> None:
+        """PREEMPTED_SWAPPED -> RUNNING, policy order, as capacity allows.
+        Swapped requests have first claim on freed capacity (the admission
+        filter reserves their blocks), and a swap-in keeps the watermark
+        free unless nothing is running (then waiting would deadlock)."""
+        waiting = sorted(
+            self.lc.in_state(ReqState.PREEMPTED_SWAPPED),
+            key=lambda e: self.scheduler.admission_key(e.req),
+        )
+        for e in waiting:
+            if not self.pool.n_free_slots:
+                return
+            reserve = self.pool.watermark if self.pool.active.any() else 0
+            if self.pool.has_paged and e.swap.n_blocks + reserve > self.pool.n_free_blocks:
+                return
+            slot = self.pool.swap_in(e.swap)
+            if slot is None:
+                return
+            if self.glass_slots is not None:
+                self.glass_slots.restore(slot, e.glass_rows)
+            e.glass_rows = None
+            e.swap = None
+            e.slot = slot
+            self.lc.to(e, ReqState.RUNNING)
+            self.swap_ins += 1
+
+    def _admit_tick(self) -> None:
+        """WAITING / PREEMPTED_RECOMPUTE -> PREFILLING, policy order,
+        best-effort under ``_fits``."""
+        while self.pool.n_free_slots:
+            got = self.scheduler.pop_admissible(self.t, 1, fits=self._fits)
             if not got:
                 return
             r = got[0]
-            slot = self.pool.admit(self._rows_needed(r))
-            assert slot is not None  # fits() held and a slot was free
-            self.live[slot] = r
-            self.outputs[slot] = None
-            self.pending[slot] = 0
-            self.prefill_pos[slot] = 0
-            self._pstats[slot] = None
-            self.admitted_step[slot] = self.t
+            # an existing entry is a PREEMPTED_RECOMPUTE re-admission (its
+            # generated prefix rides along for the replay); finished entries
+            # are pruned at the FINISHED transition and can't appear here
+            e = self.lc.entries.get(r.uid)
+            if e is None:
+                e = self.lc.add(r)
+            slot = self.pool.admit(self._first_rows(r))
+            assert slot is not None  # _fits held and a slot was free
+            self.lc.to(e, ReqState.PREFILLING)
+            e.slot = slot
+            e.prefill_pos = 0
+            e.pstats = None
+            e.admitted_step = self.t
+            if e.first_admitted_step < 0:
+                e.first_admitted_step = self.t
+                self.admission_waits.append(self.t - r.arrival)
+
+    # -- tick work ----------------------------------------------------------
 
     def _prefill_tick(self, finished: List[FinishedRequest]) -> bool:
         """Run ONE bounded chunk for the oldest mid-prefill request."""
-        pre = self._prefilling()
+        pre = self.lc.in_state(ReqState.PREFILLING)
         if not pre:
             return False
-        slot = min(pre, key=lambda s: (self.admitted_step[s], s))
-        r = self.live[slot]
-        pos = int(self.prefill_pos[slot])
+        e = min(pre, key=lambda e: (e.admitted_step, e.uid))
+        r = e.req
+        slot = e.slot
+        pos = e.prefill_pos
+        # chunks never cross the prompt boundary: GLASS running-sum stats
+        # must cover EXACTLY the prompt tokens so a recompute replay (same
+        # boundaries, same tokens) reproduces the identical fused mask
         T = min(self.chunk_tokens, len(r.prompt) - pos)
+        while not self.pool.ensure_capacity(slot, pos + T):
+            if not self._preempt_for_capacity(protect=e):
+                # sole in-flight request: cannot happen (submit validates the
+                # full need) — recompute-preempt as a safe fallback
+                self._preempt(e, "recompute")
+                return False
         toks = jnp.asarray(np.asarray(r.prompt[pos : pos + T], np.int32))[None]
         # gather width covers the *prefilled prefix* (every page written so
         # far plus this chunk), not the request's full allocation — early
@@ -754,22 +967,32 @@ class PagedEngine(_QueueEngineBase):
         )
         self.pool.cache = arena
         self.pool.lengths[slot] = pos + T
-        self.prefill_pos[slot] = pos + T
-        self._pstats[slot] = (
-            stats if self._pstats[slot] is None
-            else jax.tree.map(lambda a, b: a + b, self._pstats[slot], stats)
+        e.prefill_pos = pos + T
+        e.pstats = (
+            stats if e.pstats is None
+            else jax.tree.map(lambda a, b: a + b, e.pstats, stats)
         )
         self.max_prefill_tokens_per_tick = max(self.max_prefill_tokens_per_tick, T)
         if pos + T == len(r.prompt):  # final chunk: finalize GLASS + first token
             if self.glass_slots is not None:
-                self.glass_slots.admit([slot], [self._pstats[slot]])
-            self._pstats[slot] = None
-            first = self._first_token(np.asarray(last[0], np.float32))
-            self.outputs[slot] = [first]
-            self.pending[slot] = first
-            self.prefill_pos[slot] = -1
-            if len(self.outputs[slot]) >= r.max_new:
-                self._finish(slot, finished)
+                rows = self.glass_slots.admit([slot], [e.pstats])
+                if self._mode == "block_sparse":
+                    # host copy of the (L, nb_keep) active-block list: the
+                    # group-by key for the shared-list decode kernel
+                    e.glass_key = np.asarray(rows[:, 0]).tobytes()
+            e.pstats = None
+            self.lc.to(e, ReqState.RUNNING)
+            if e.outputs:
+                # recompute resume: the generated prefix is replayed through
+                # decode as forced tokens — nothing is re-sampled
+                e.pending = e.outputs[0]
+                e.replay_left = len(e.outputs) - 1
+            else:
+                first = self._first_token(np.asarray(last[0], np.float32))
+                e.outputs = [first]
+                e.pending = first
+                if len(e.outputs) >= r.max_new:
+                    self._finish(slot, finished)
         return True
 
     def _horizon(self, prefill_pending: bool) -> int:
@@ -778,16 +1001,15 @@ class PagedEngine(_QueueEngineBase):
         and — when capacity could accept it — the next queued arrival."""
         if prefill_pending:
             return 1
-        dec = self._decoding()
-        h = min(self.live[int(s)].max_new - len(self.outputs[int(s)]) for s in dec)
+        run = self.lc.in_state(ReqState.RUNNING)
+        h = min(e.req.max_new - len(e.outputs) + e.replay_left for e in run)
         if self.pool.n_free_slots and len(self.scheduler):
             # only arrivals that could actually be admitted bound the chunk:
             # an arrived-but-unfitting request (block pressure) can only be
             # admitted after an eviction, and h is already bounded by the
             # first eviction — clamping on it would degrade decode to H=1
             na = min(
-                (r.arrival for r in self.scheduler.queue
-                 if self.pool.fits(self._rows_needed(r))),
+                (r.arrival for r in self.scheduler.queue if self._fits(r)),
                 default=None,
             )
             if na is not None:
@@ -798,54 +1020,143 @@ class PagedEngine(_QueueEngineBase):
             p *= 2
         return p
 
+    def _growth_need(self, run: List[LiveRequest], H: int) -> int:
+        """Blocks the pool must supply for every running slot to advance H
+        tokens (allocate-on-boundary growth past current holdings)."""
+        return sum(
+            max(
+                0,
+                self.pool.blocks_needed(int(self.pool.lengths[e.slot]) + H)
+                - self.pool.held_blocks(e.slot),
+            )
+            for e in run
+        )
+
+    def _ffn_grouping(self, run: List[LiveRequest]):
+        """Group decode rows by identical active-block lists (block_sparse
+        mode): rows in a group >= 2 batch through the shared-list
+        ``glass_ffn`` kernel; everything else (singletons, inactive and
+        mid-prefill rows) falls back to rowwise.  Returns (static group
+        sizes, row permutation) or ((), None)."""
+        if self._mode != "block_sparse":
+            return (), None
+        keys: List[Optional[bytes]] = [None] * self.pool.max_slots
+        for e in run:
+            keys[e.slot] = e.glass_key
+        groups: Dict[bytes, List[int]] = {}
+        for s in range(self.pool.max_slots):
+            if keys[s] is not None:  # inactive rows never justify a group:
+                # their output is discarded, and letting them form one would
+                # change the static `groups` signature (and recompile the
+                # decode scan) on every occupancy change
+                groups.setdefault(keys[s], []).append(s)
+        multi = [g for g in groups.values() if len(g) > 1]
+        if not multi:
+            return (), None
+        # canonicalize: sizes sorted descending, so tick-to-tick reshuffles
+        # that only permute the groups reuse one compiled decode variant —
+        # the static-signature space is partitions of max_slots (22 at 8
+        # slots), not compositions (128)
+        multi.sort(key=lambda g: (-len(g), g[0]))
+        in_multi = {s for g in multi for s in g}
+        rest = [s for s in range(self.pool.max_slots) if s not in in_multi]
+        perm = [s for g in multi for s in g] + rest
+        return tuple(len(g) for g in multi), np.asarray(perm, np.int32)
+
     def _decode_tick(self, finished: List[FinishedRequest], prefill_pending: bool) -> bool:
-        dec = self._decoding()
-        if dec.size == 0:
+        run = self.lc.in_state(ReqState.RUNNING)
+        if not run:
             return False
         H = self._horizon(prefill_pending)
-        decoding = np.zeros((self.pool.max_slots,), bool)
-        decoding[dec] = True
-        lengths = np.where(decoding, self.pool.lengths, 0).astype(np.int32)
-        toks = np.where(decoding, self.pending, 0).astype(np.int32)
+        if self.pool.has_paged and self.alloc_mode == "incremental":
+            # shrink the fused chunk before shrinking the working set: a
+            # smaller H needs fewer boundary crossings than a preemption
+            while H > 1 and self._growth_need(run, H) > self.pool.n_free_blocks:
+                H //= 2
+            while self._growth_need(run, H) > self.pool.n_free_blocks:
+                if not self._preempt_for_capacity():
+                    break
+                run = self.lc.in_state(ReqState.RUNNING)
+                if not run:
+                    return False
+            for e in run:
+                ok = self.pool.ensure_capacity(e.slot, int(self.pool.lengths[e.slot]) + H)
+                assert ok, "growth fit was just established"
+        B = self.pool.max_slots
+        decoding = np.zeros((B,), bool)
+        lengths = np.zeros((B,), np.int32)
+        toks = np.zeros((B,), np.int32)
+        ftoks = np.zeros((H, B), np.int32)
+        fmask = np.zeros((H, B), bool)
+        for e in run:
+            s = e.slot
+            decoding[s] = True
+            lengths[s] = self.pool.lengths[s]
+            toks[s] = e.pending
+            f = min(H, e.replay_left)
+            if f:  # forced re-feeds: outputs[k - replay_left : ...]
+                start = len(e.outputs) - e.replay_left
+                for j in range(f):
+                    ftoks[j, s] = e.outputs[start + j]
+                    fmask[j, s] = True
         if self.pool.has_paged:
-            need = int(max(lengths[s] + H for s in dec))
+            need = int(max(lengths[e.slot] + H for e in run))
             nb = _pow2_bucket(-(-need // self.pool.block_size), self.pool.nb_max)
             btab = np.where(
                 decoding[:, None], self.pool.block_table[:, :nb], 0
             ).astype(np.int32)
         else:
-            btab = np.zeros((self.pool.max_slots, 1), np.int32)
+            btab = np.zeros((B, 1), np.int32)
+        groups, perm = self._ffn_grouping(run)
+        if perm is None:
+            perm = np.zeros((B,), np.int32)  # unused when groups == ()
         extra = self.glass_slots.arena if self.glass_slots is not None else None
         seq, arena, self._rng = self._decode(
             self.params, self.pool.cache, jnp.asarray(lengths), jnp.asarray(toks),
-            jnp.asarray(btab), jnp.asarray(decoding), extra, self._rng, H,
+            jnp.asarray(btab), jnp.asarray(decoding), extra,
+            jnp.asarray(ftoks), jnp.asarray(fmask), jnp.asarray(perm),
+            self._rng, groups,
         )
         self.pool.cache = arena
         seq = np.asarray(seq)  # (H, B)
-        self.slot_steps += H * int(dec.size)
-        for s in dec:
-            s = int(s)
+        self.slot_steps += H * len(run)
+        # telemetry: grouped rows are live by construction (_ffn_grouping
+        # keys only RUNNING slots); memory integrates POST-growth holdings —
+        # blocks allocated for this chunk's boundary crossings count for
+        # every tick they are held
+        self.grouped_rows += H * sum(groups)
+        self.kv_row_ticks += H * self.pool.blocks_in_use * self.pool.block_size
+        for e in run:
+            s = e.slot
             self.pool.lengths[s] += H
-            self.outputs[s].extend(int(x) for x in seq[:, s])
-            self.pending[s] = seq[-1, s]
-            if len(self.outputs[s]) >= self.live[s].max_new:
+            f = min(H, e.replay_left)
+            e.replay_left -= f
+            e.outputs.extend(int(x) for x in seq[f:, s])
+            e.pending = int(seq[-1, s])
+            if len(e.outputs) >= e.req.max_new:
                 self._finish(s, finished)
         self.t += H
         return True
 
     def step(self) -> List[FinishedRequest]:
-        """One engine tick group: admit (policy order, best-effort under
-        block availability), run at most one bounded prefill chunk, then
-        decode the largest provably safe fused chunk."""
+        """One engine tick: a thin driver over the lifecycle — swap-ins
+        first (they have first claim on freed capacity), then admissions
+        (policy order, best-effort under the watermark-aware filter), at
+        most one bounded prefill chunk, then the largest provably safe
+        fused decode chunk, preempting victims if growth outruns the
+        pool."""
         finished: List[FinishedRequest] = []
         t0 = self.t
-        self._admit()
+        self._swap_in_tick()
+        self._admit_tick()
         prefilled = self._prefill_tick(finished)
-        self._admit()  # a finished max_new==1 request may have freed capacity
+        self._swap_in_tick()  # a finished max_new==1 request frees capacity
+        self._admit_tick()
         # memory telemetry: blocks held by every in-flight request (decoding
-        # AND mid-prefill) integrate over every tick this step advances
+        # AND mid-prefill); _decode_tick charges its own ticks post-growth,
+        # this snapshot covers prefill-only / idle advances
         rows_now = self.pool.blocks_in_use * self.pool.block_size
-        prefill_pending = bool(self._prefilling())
+        prefill_pending = bool(self.lc.in_state(ReqState.PREFILLING))
         decoded = self._decode_tick(finished, prefill_pending or prefilled)
         if not decoded:
             if prefilled:
@@ -853,9 +1164,5 @@ class PagedEngine(_QueueEngineBase):
             else:
                 na = self.scheduler.next_arrival()
                 self.t = max(self.t + 1, na if na is not None else self.t + 1)
-        self.kv_row_ticks += (self.t - t0) * rows_now
+            self.kv_row_ticks += (self.t - t0) * rows_now
         return finished
-
-    def _on_free(self, slot: int) -> None:
-        self.prefill_pos[slot] = -1
-        self._pstats[slot] = None

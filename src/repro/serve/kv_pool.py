@@ -33,7 +33,8 @@ decode step needs no per-row branching.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -127,6 +128,34 @@ class KVPool:
 # ---------------------------------------------------------------------------
 
 
+def pow2_bucket(n: int, cap: int) -> int:
+    """Smallest power of two >= n, clamped to [1, cap].  Shared by the
+    engine's gather-width bucketing and the pool's swap padding so jitted
+    variants stay O(log cap)."""
+    p = 1
+    while p < n:
+        p *= 2
+    return min(p, cap)
+
+
+@dataclass
+class SwappedRequest:
+    """Host-side store of one preempted-by-swap request's device state.
+
+    ``host`` mirrors the cache pytree: paged leaves hold the request's
+    gathered blocks (padded to a power of two with trash-block copies so
+    the gather/scatter jits compile O(log nb) variants), state leaves hold
+    the slot's row.  Swap-in writes it back bit-identical into freshly
+    allocated blocks / a freshly allocated slot.
+    """
+
+    host: Any
+    n_blocks: int  # live blocks to re-allocate (excludes padding)
+    n_padded: int  # gather width actually stored
+    length: int  # pool lengths[slot] at swap-out
+    nbytes: int  # live bytes moved out (telemetry)
+
+
 class BlockAllocator:
     """Free-list allocator over block ids ``1..num_blocks-1`` (0 = trash).
 
@@ -213,11 +242,13 @@ class BlockPool:
         max_len: int,
         block_size: int = 16,
         num_blocks: Optional[int] = None,
+        watermark: int = 0,
     ):
         self.model = model
         self.max_slots = max_slots
         self.max_len = max_len
         self.block_size = block_size
+        self.watermark = watermark  # free blocks ADMISSIONS must leave untouched
         self.nb_max = -(-max_len // block_size)  # blocks per request, worst case
         if num_blocks is None:
             num_blocks = max_slots * self.nb_max + 1  # worst case + trash
@@ -259,6 +290,31 @@ class BlockPool:
         # (kv_len masking is the correctness mechanism for stale rows)
         self._clear_state = jax.jit(clear_state, donate_argnums=(0,))
 
+        def swap_gather(arena, blocks, slot):
+            # paged leaves: the request's blocks; state leaves: the slot row
+            def one(a, ax, pg):
+                if pg:
+                    return jnp.take(a, blocks, axis=ax)
+                return jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=ax)
+
+            return jax.tree.map(one, arena, self.axes, self.paged)
+
+        def swap_scatter(arena, host, blocks, slot):
+            # padding entries in ``blocks`` are TRASH duplicates: their rows
+            # carry gathered trash content back into the trash block — no-ops
+            def one(a, h, ax, pg):
+                if pg:
+                    idx = (slice(None),) * ax + (blocks,)
+                    return a.at[idx].set(h.astype(a.dtype))
+                starts = [jnp.int32(0)] * a.ndim
+                starts[ax] = slot
+                return jax.lax.dynamic_update_slice(a, h.astype(a.dtype), starts)
+
+            return jax.tree.map(one, arena, host, self.axes, self.paged)
+
+        self._swap_gather = jax.jit(swap_gather)
+        self._swap_scatter = jax.jit(swap_scatter, donate_argnums=(0,))
+
     # -- accounting ---------------------------------------------------------
 
     @property
@@ -279,6 +335,23 @@ class BlockPool:
     def fits(self, rows: int) -> bool:
         return (not self.has_paged) or self.blocks_needed(rows) <= self.n_free_blocks
 
+    def fits_admission(self, rows: int, reserved: int = 0) -> bool:
+        """Admission-time fit: must leave the watermark reserve free (growth
+        of already-running requests may consume it; fresh admissions may
+        not, so admitting cannot instantly force a preemption).  On an IDLE
+        pool the watermark is waived — there is nobody to preempt, and
+        holding the reserve would permanently starve any request whose
+        first chunk needs it (liveness beats headroom).  ``reserved`` adds
+        further off-book claims — e.g. blocks owed to swapped-out requests
+        awaiting swap-in."""
+        if not self.has_paged:
+            return True
+        wm = self.watermark if self.active.any() else 0
+        return self.blocks_needed(rows) + wm + reserved <= self.n_free_blocks
+
+    def held_blocks(self, slot: int) -> int:
+        return len(self._held.get(slot, ()))
+
     # -- request lifecycle --------------------------------------------------
 
     def admit(self, rows: int) -> Optional[int]:
@@ -297,6 +370,84 @@ class BlockPool:
         self.block_table[slot, :] = 0
         self.block_table[slot, : len(blocks)] = blocks
         self.lengths[slot] = 0
+        self.active[slot] = True
+        self.peak_blocks = max(self.peak_blocks, self.blocks_in_use)
+        return slot
+
+    def ensure_capacity(self, slot: int, rows: int) -> bool:
+        """Allocate-on-boundary: grow ``slot`` to cover ``rows`` KV rows,
+        allocating only the blocks past its current holding (one block per
+        crossed boundary).  All-or-nothing; returns False when the pool
+        cannot supply the growth (the caller preempts a victim and
+        retries).  Growth deliberately ignores the watermark — the reserve
+        exists exactly so running requests can cross a boundary without an
+        immediate preemption."""
+        if not self.active[slot]:
+            raise ValueError(f"slot {slot} is not active")
+        if not self.has_paged:
+            return True
+        need = self.blocks_needed(rows)
+        held = len(self._held[slot])
+        if need <= held:
+            return True
+        got = self.allocator.alloc(need - held)
+        if got is None:
+            return False
+        self._held[slot].extend(got)
+        self.block_table[slot, held : held + len(got)] = got
+        self.peak_blocks = max(self.peak_blocks, self.blocks_in_use)
+        return True
+
+    def _pad_blocks(self, blocks: List[int]) -> List[int]:
+        """Pad a block list to a power of two with TRASH duplicates so the
+        swap gather/scatter jits compile O(log nb_max) shape variants."""
+        p = pow2_bucket(max(1, len(blocks)), max(1, self.nb_max))
+        return list(blocks) + [BlockAllocator.TRASH] * (p - len(blocks))
+
+    def swap_out(self, slot: int) -> SwappedRequest:
+        """Copy the slot's blocks + state rows to host and free everything.
+
+        The returned :class:`SwappedRequest` is the request's complete
+        device state; :meth:`swap_in` restores it bit-identical."""
+        if not self.active[slot]:
+            raise ValueError(f"slot {slot} is not active")
+        blocks = list(self._held.get(slot, ()))
+        padded = self._pad_blocks(blocks)
+        host = jax.device_get(
+            self._swap_gather(self.cache, jnp.asarray(padded, jnp.int32), jnp.int32(slot))
+        )
+        live_frac_num, live_frac_den = max(1, len(blocks)), len(padded)
+        nbytes = 0
+        for h, pg in zip(jax.tree.leaves(host), jax.tree.leaves(self.paged)):
+            nbytes += h.nbytes * live_frac_num // live_frac_den if pg else h.nbytes
+        sw = SwappedRequest(
+            host=host, n_blocks=len(blocks), n_padded=len(padded),
+            length=int(self.lengths[slot]), nbytes=nbytes,
+        )
+        self.free(slot)
+        return sw
+
+    def swap_in(self, sw: SwappedRequest) -> Optional[int]:
+        """Restore a swapped request into a fresh slot + fresh blocks.
+        Returns the new slot, or None when slots/blocks are unavailable
+        (all-or-nothing, so a failed swap-in changes nothing)."""
+        if not self._free_slots:
+            return None
+        blocks: List[int] = []
+        if self.has_paged and sw.n_blocks:
+            got = self.allocator.alloc(sw.n_blocks)
+            if got is None:
+                return None
+            blocks = got
+        slot = self._free_slots.pop()
+        self._held[slot] = blocks
+        self.block_table[slot, :] = 0
+        self.block_table[slot, : len(blocks)] = blocks
+        padded = blocks + [BlockAllocator.TRASH] * (sw.n_padded - len(blocks))
+        self.cache = self._swap_scatter(
+            self.cache, sw.host, jnp.asarray(padded, jnp.int32), jnp.int32(slot)
+        )
+        self.lengths[slot] = sw.length
         self.active[slot] = True
         self.peak_blocks = max(self.peak_blocks, self.blocks_in_use)
         return slot

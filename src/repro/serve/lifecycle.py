@@ -1,0 +1,183 @@
+"""Per-request lifecycle state machine for the paged serving engine.
+
+Every request the :class:`~repro.serve.engine.PagedEngine` touches owns one
+:class:`LiveRequest` entry that moves through an explicit state machine::
+
+    WAITING ──▶ PREFILLING ──▶ RUNNING ──▶ FINISHED
+                   │   ▲          │  ▲
+                   │   │          │  │ (swap-in restores KV bit-exact)
+                   │   │          ▼  │
+                   │   │   PREEMPTED_SWAPPED
+                   │   │          │
+                   │   │          ▼ (requeue; replay prompt + generated
+                   │   └── PREEMPTED_RECOMPUTE     prefix through prefill)
+                   └──────────────▲
+
+All resource transitions (slot binding, block allocation, swap stores,
+GLASS per-slot rows) happen *at* a state transition, never ad hoc: the
+engine tick asks the lifecycle for this tick's swap-in / admission /
+prefill / decode work and the :class:`Lifecycle` enforces that only legal
+transitions occur.  Illegal transitions raise — a preempted request that
+was never swapped out cannot be swapped in, a finished request cannot be
+preempted, and so on.
+
+Preemption comes in two flavors, chosen per victim by a cost model
+(:func:`preemption_kind`):
+
+* **swap** — the request's KV blocks are copied to a host-side store and
+  freed (:meth:`BlockPool.swap_out`); resuming copies them back into
+  freshly allocated blocks, bit-identical, so decode continues as if
+  nothing happened.  Cost ∝ blocks held (bytes moved twice).
+* **recompute** — the blocks are dropped and the request re-queued; on
+  re-admission the prompt is replayed through the existing chunked
+  prefill (running-sum GLASS stats reproduce the *identical* fused mask,
+  because the replay uses the same chunk boundaries over the same prompt
+  tokens) and the already-generated prefix is re-fed through the decode
+  path as forced tokens (bit-identical KV, no new sampling).  Cost ∝
+  tokens to replay.
+
+Resumed streams are token-identical to preemption-free serving under
+greedy decoding (the tested guarantee); with a temperature the replay
+shifts the engine-global RNG stream, so sampled continuations differ.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Dict, List, Optional
+
+from .scheduler import Request
+
+
+class ReqState(str, Enum):
+    WAITING = "waiting"
+    PREFILLING = "prefilling"
+    RUNNING = "running"
+    PREEMPTED_SWAPPED = "preempted_swapped"
+    PREEMPTED_RECOMPUTE = "preempted_recompute"
+    FINISHED = "finished"
+
+
+_LEGAL = {
+    ReqState.WAITING: {ReqState.PREFILLING},
+    ReqState.PREFILLING: {
+        ReqState.RUNNING,  # even max_new == 1 passes through RUNNING to finish
+        ReqState.PREEMPTED_RECOMPUTE,  # partial prefill is cheaper to redo than to swap
+    },
+    ReqState.RUNNING: {
+        ReqState.FINISHED,
+        ReqState.PREEMPTED_SWAPPED,
+        ReqState.PREEMPTED_RECOMPUTE,
+    },
+    ReqState.PREEMPTED_SWAPPED: {ReqState.RUNNING},
+    ReqState.PREEMPTED_RECOMPUTE: {ReqState.PREFILLING},
+    ReqState.FINISHED: set(),
+}
+
+
+@dataclass
+class LiveRequest:
+    """One request's lifecycle entry: scheduling state + everything needed
+    to resume it after preemption (host-side; device state lives in the
+    pool / GLASS arenas and is re-bound at each transition)."""
+
+    req: Request
+    state: ReqState = ReqState.WAITING
+    slot: int = -1  # pool slot while PREFILLING / RUNNING, else -1
+    prefill_pos: int = 0  # prompt tokens already prefilled
+    outputs: List[int] = field(default_factory=list)  # generated token ids
+    pending: int = 0  # next token to feed into decode
+    replay_left: int = 0  # forced re-feeds outstanding after a recompute resume
+    pstats: Any = None  # running-sum GLASS stats while PREFILLING
+    glass_rows: Any = None  # saved per-slot GLASS rows while PREEMPTED_SWAPPED
+    glass_key: Optional[bytes] = None  # host active-block-list key (block_sparse)
+    swap: Any = None  # BlockPool SwappedRequest while PREEMPTED_SWAPPED
+    admitted_step: int = -1  # latest admission (for prefill ordering)
+    first_admitted_step: int = -1  # first admission (admission-latency metric)
+    preemptions: int = 0
+
+    @property
+    def uid(self) -> int:
+        return self.req.uid
+
+
+class Lifecycle:
+    """Registry of live entries + the legal-transition checker.
+
+    ``counts[(from, to)]`` tallies every transition taken — the engine's
+    preemption telemetry and the tests' flow assertions both read it.
+    """
+
+    def __init__(self):
+        self.entries: Dict[int, LiveRequest] = {}
+        self.counts: Dict[tuple, int] = {}
+
+    def add(self, req: Request) -> LiveRequest:
+        if req.uid in self.entries and self.entries[req.uid].state is not ReqState.FINISHED:
+            raise ValueError(f"request {req.uid} is already live")
+        e = LiveRequest(req=req)
+        self.entries[req.uid] = e
+        return e
+
+    def to(self, e: LiveRequest, new: ReqState) -> None:
+        if new not in _LEGAL[e.state]:
+            raise ValueError(f"illegal transition {e.state.value} -> {new.value} (uid={e.uid})")
+        self.counts[(e.state.value, new.value)] = self.counts.get((e.state.value, new.value), 0) + 1
+        e.state = new
+        if new is ReqState.FINISHED and self.entries.get(e.uid) is e:
+            # finished entries are dead weight (prompt + full token list):
+            # prune so a long-lived engine stays O(in-flight), not O(served)
+            del self.entries[e.uid]
+
+    def in_state(self, *states: ReqState) -> List[LiveRequest]:
+        return [e for e in self.entries.values() if e.state in states]
+
+    def by_slot(self, slot: int) -> LiveRequest:
+        for e in self.entries.values():
+            if e.slot == slot and e.state in (ReqState.PREFILLING, ReqState.RUNNING):
+                return e
+        raise KeyError(f"no live entry bound to slot {slot}")
+
+    def preempted(self, *, kind: Optional[str] = None) -> int:
+        """Total preemption transitions taken (optionally one kind)."""
+        total = 0
+        for (src, dst), n in self.counts.items():
+            if dst == ReqState.PREEMPTED_SWAPPED.value and kind in (None, "swap"):
+                total += n
+            elif dst == ReqState.PREEMPTED_RECOMPUTE.value and kind in (None, "recompute"):
+                total += n
+        return total
+
+
+@dataclass(frozen=True)
+class PreemptionConfig:
+    """Knobs for the swap-vs-recompute decision and the allocation reserve.
+
+    ``mode="auto"`` picks per victim by comparing
+    ``blocks_held * swap_cost_per_block`` (bytes copied out and back)
+    against ``tokens_to_replay * recompute_cost_per_token`` (prompt +
+    generated prefix re-run through prefill/forced decode).  The defaults
+    make swap win for long contexts with little generated text and
+    recompute win for short contexts — the vLLM-style tradeoff.
+    ``watermark_blocks`` is the free-block reserve that *admissions* must
+    leave untouched (running requests may grow into it), so a fresh
+    admission cannot instantly force a preemption.
+    """
+
+    mode: str = "auto"  # auto | swap | recompute
+    swap_cost_per_block: float = 2.0
+    recompute_cost_per_token: float = 1.0
+    watermark_blocks: int = 1
+
+    def __post_init__(self):
+        if self.mode not in ("auto", "swap", "recompute"):
+            raise ValueError(f"unknown preemption mode {self.mode!r}")
+
+
+def preemption_kind(cfg: PreemptionConfig, blocks_held: int, tokens_to_replay: int) -> str:
+    """Cost-model decision for one victim: ``"swap"`` or ``"recompute"``."""
+    if cfg.mode != "auto":
+        return cfg.mode
+    swap_cost = blocks_held * cfg.swap_cost_per_block
+    recompute_cost = tokens_to_replay * cfg.recompute_cost_per_token
+    return "swap" if swap_cost < recompute_cost else "recompute"

@@ -11,10 +11,17 @@ selectable :class:`AdmissionPolicy`:
     requests last, FIFO among equals.
 
 Admission is *best-effort* under a capacity filter: a request that does not
-currently fit (e.g. not enough free KV blocks) is skipped this tick and
+currently fit (e.g. not enough free KV blocks after the watermark reserve
+and the blocks owed to in-flight swap-ins) is skipped this tick and
 retried later, so one huge request cannot head-of-line-block small ones.
-Everything device-side (arena/block writes, decode) lives in
-``engine.ContinuousEngine`` / ``engine.PagedEngine`` / ``kv_pool``.
+
+The scheduler is also the *preemption* policy: when a running request
+cannot grow (allocate-on-boundary failed), :meth:`Scheduler.select_victim`
+picks who yields — the mirror image of the admission order (lowest
+priority first / latest deadline first / newest submission first).
+Everything device-side (arena/block writes, decode, swap copies) lives in
+``engine.PagedEngine`` / ``kv_pool``; the lifecycle states themselves in
+``serve.lifecycle``.
 """
 from __future__ import annotations
 
@@ -78,19 +85,49 @@ class Scheduler:
         req._submit_seq = next(self._seq)  # policy tie-break: submission order
         self.queue.append(req)
 
+    def requeue(self, req: Request) -> None:
+        """Re-queue a preempted-for-recompute request.  Feasibility was
+        validated at the original submit and ``_submit_seq`` is preserved,
+        so the request keeps its place in the policy order instead of
+        going to the back of the FIFO tie-break."""
+        assert hasattr(req, "_submit_seq"), "requeue() is for previously submitted requests"
+        self.queue.append(req)
+
     def __len__(self) -> int:
         return len(self.queue)
 
     def next_arrival(self) -> Optional[int]:
         return min((r.arrival for r in self.queue), default=None)
 
-    def _key(self, r: Request):
+    def admission_key(self, r: Request):
+        """Admission order under the active policy (lower = admitted
+        first).  Public because the engine also uses it to order swap-ins
+        — resumption competes in the same policy order as admission."""
         seq = getattr(r, "_submit_seq", 0)
         if self.policy is AdmissionPolicy.PRIORITY:
             return (-r.priority, seq)
         if self.policy is AdmissionPolicy.DEADLINE:
             return (r.deadline if r.deadline is not None else np.inf, seq)
         return (seq,)
+
+    def victim_key(self, r: Request):
+        """Preemption order — the mirror image of the admission order:
+        lowest priority first (PRIORITY), latest deadline first with
+        deadline-less requests before any deadline (DEADLINE), newest
+        submission first (FIFO, i.e. LIFO preemption so the oldest work
+        keeps its progress)."""
+        seq = getattr(r, "_submit_seq", 0)
+        if self.policy is AdmissionPolicy.PRIORITY:
+            return (r.priority, -seq)
+        if self.policy is AdmissionPolicy.DEADLINE:
+            return (-(r.deadline if r.deadline is not None else np.inf), -seq)
+        return (-seq,)
+
+    def select_victim(self, candidates: List[Request]) -> Optional[Request]:
+        """Pick the request that yields its resources under pressure."""
+        if not candidates:
+            return None
+        return min(candidates, key=self.victim_key)
 
     def pop_admissible(
         self,
@@ -111,7 +148,7 @@ class Scheduler:
             for i, r in enumerate(self.queue):
                 if r.arrival > now or (fits is not None and not fits(r)):
                     continue
-                if best_i < 0 or self._key(r) < self._key(self.queue[best_i]):
+                if best_i < 0 or self.admission_key(r) < self.admission_key(self.queue[best_i]):
                     best_i = i
             if best_i < 0:
                 break
