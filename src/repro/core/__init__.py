@@ -1,10 +1,16 @@
 from .fusion import GlassConfig, glass_scores, jaccard, ranks_ascending, select
-from .glass import MaskSet, build_masks, compact_params, compute_global_prior
+from .glass import (
+    MaskSet,
+    build_masks,
+    build_tiered_masks,
+    compact_params,
+    compute_global_prior,
+)
 from .nps import NPSConfig, nps_corpus, teacher_forced_batch
 
 __all__ = [
     "GlassConfig", "MaskSet", "NPSConfig",
-    "build_masks", "compact_params", "compute_global_prior",
+    "build_masks", "build_tiered_masks", "compact_params", "compute_global_prior",
     "glass_scores", "jaccard", "nps_corpus", "ranks_ascending", "select",
     "teacher_forced_batch",
 ]

@@ -19,7 +19,7 @@ results reproducible.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 import jax
@@ -34,9 +34,26 @@ class GlassConfig:
     selection: str = "neuron"  # neuron | block | shard_balanced
     block_size: int = 128
     n_shards: int = 1
+    # Draft tier for self-speculative decode: the SAME fused scores selected
+    # at density * draft_ratio.  Because both tiers rank the same scores with
+    # the same stable tie-break, the draft selection is always a prefix of
+    # the target's sorted order — draft units/blocks NEST inside the target
+    # set, so block-sparse decode's active-block lists nest too.
+    draft_ratio: Optional[float] = None  # None = no draft tier
+
+    def __post_init__(self):
+        if self.draft_ratio is not None and not (0.0 < self.draft_ratio <= 1.0):
+            raise ValueError(f"draft_ratio must be in (0, 1], got {self.draft_ratio}")
 
     def k_of(self, m: int) -> int:
         return max(1, int(round(self.density * m)))
+
+    def draft_config(self) -> "GlassConfig":
+        """The draft tier as a standalone config (same selection machinery,
+        ``density * draft_ratio`` units kept, no further nesting)."""
+        if self.draft_ratio is None:
+            raise ValueError("draft_config() needs draft_ratio set")
+        return replace(self, density=self.density * self.draft_ratio, draft_ratio=None)
 
 
 def ranks_ascending(scores: jax.Array, axis: int = -1) -> jax.Array:

@@ -103,6 +103,44 @@ def build_masks(
     return MaskSet(idx=idx, mask=mask, scores=scores)
 
 
+def build_tiered_masks(
+    local_stats: Dict,
+    global_prior: jax.Array,
+    gcfg: GlassConfig,
+    *,
+    slot_axis: bool = False,
+) -> "tuple[MaskSet, MaskSet]":
+    """Target + draft mask sets from ONE fused-score pass.
+
+    Both tiers rank the identical consensus scores and select with the same
+    stable tie-break, only ``k`` differs (``density`` vs ``density *
+    draft_ratio``), so the draft selection is a prefix of the target's
+    sorted order: draft-tier active units (and, under ``selection="block"``,
+    active block ids) always NEST inside the target tier's.  That nesting is
+    what lets a self-speculative decoder treat the draft pass as a strictly
+    cheaper approximation of the target pass over the same weights.
+
+    Returns ``(target, draft)``; layouts match :func:`build_masks`
+    (including the ``slot_axis=True`` continuous-batching layout).
+    """
+    if gcfg.draft_ratio is None:
+        raise ValueError("build_tiered_masks needs GlassConfig(draft_ratio=...)")
+    if slot_axis:
+        def one(st):
+            t, d = build_tiered_masks(st, global_prior, gcfg)
+            return t.idx, t.mask, t.scores, d.idx, d.mask, d.scores
+
+        ti, tm, ts, di, dm, ds = jax.vmap(one)(local_stats)
+        mv = lambda a: jnp.moveaxis(a, 0, 1)
+        return (
+            MaskSet(idx=mv(ti), mask=mv(tm), scores=mv(ts)),
+            MaskSet(idx=mv(di), mask=mv(dm), scores=mv(ds)),
+        )
+    ms = build_masks(local_stats, global_prior, gcfg)
+    didx, dmask = select(ms.scores, gcfg.draft_config())
+    return ms, MaskSet(idx=didx, mask=dmask, scores=ms.scores)
+
+
 def compact_params(model: Model, params, idx: jax.Array):
     """One-time gather of selected units into compact decode weights.
 

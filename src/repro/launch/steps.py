@@ -208,6 +208,44 @@ def make_decode_step_block_sparse(model: Model, block_size: int, groups=None):
     return decode_grouped
 
 
+def make_verify_step(model: Model, glass_mode: Optional[str] = None,
+                     block_size: int = 128):
+    """Speculative-verify step builder: the TARGET tier checks all ``T``
+    candidate positions of a draft in one jittable program.
+
+    Returns ``verify(params, cache, tokens, cache_len[, tier])`` ->
+    ``(greedy (B, T), cache)`` where ``tokens`` is ``[pending, d_1..d_k]``
+    and ``greedy[:, j]`` is the target verdict ``t_j`` (accept the longest
+    prefix with ``d_{j+1} == t_j``).  The ``tier`` argument matches
+    ``glass_mode``: ``None`` serves dense, ``"masked"`` takes per-slot
+    ``ffn_masks``, ``"compact"`` takes a compact-weight pytree,
+    ``"block_sparse"`` takes active FFN block ids.  The DRAFT pass needs no
+    new builder — the existing decode-step builders accept the draft
+    tier's rows/masks unchanged (tiers share every layout, only ``k``
+    differs)."""
+    if glass_mode not in (None, "masked", "compact", "block_sparse"):
+        raise ValueError(glass_mode)
+
+    if glass_mode is None:
+        def verify(params, cache, tokens, cache_len):
+            return model.verify_steps(params, tokens, cache, cache_len)
+
+        return verify
+
+    def verify_tiered(params, cache, tokens, cache_len, tier):
+        kw = {}
+        if glass_mode == "masked":
+            kw["ffn_masks"] = tier
+        elif glass_mode == "compact":
+            kw["compact_layers"] = tier
+        else:
+            kw["ffn_block_idx"] = tier
+            kw["ffn_block_size"] = block_size
+        return model.verify_steps(params, tokens, cache, cache_len, **kw)
+
+    return verify_tiered
+
+
 def make_chunked_prefill(model: Model, chunk_tokens: int):
     """Chunked-prefill step for the paged serving path: processes up to
     ``chunk_tokens`` prompt tokens against a paged cache + block table,

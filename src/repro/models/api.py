@@ -165,6 +165,54 @@ class Model:
             ffn_groups=ffn_groups, ffn_row_perm=ffn_row_perm,
         )
 
+    def verify_steps(
+        self,
+        params,
+        tokens: jax.Array,  # (B, T): the T candidate feeds, in order
+        cache,
+        cache_len,  # scalar, or (B,) per-slot lengths
+        *,
+        ffn_masks=None,
+        compact_layers=None,
+        block_table=None,
+        ffn_block_idx=None,
+        ffn_block_size: int = 128,
+    ):
+        """Multi-token verification: feed ``tokens[:, j]`` sequentially
+        through :meth:`decode_step` inside ONE ``lax.scan``, returning each
+        position's greedy argmax and the advanced cache.
+
+        This is the model-level primitive behind self-speculative decoding:
+        feed ``[pending, d_1 .. d_k]`` under the TARGET tier's masks and
+        read the verdict ``t_j`` at every position (accept the longest
+        prefix with ``d_{j+1} == t_j``).  It scans the SAME single-token
+        decode body the serving engines run, so KV rows, recurrent state,
+        and logits are BIT-identical to ``T`` individual decode steps — the
+        property the speculative state-invariant suite relies on for exact
+        rollback.  A parallel multi-token verify kernel (one forward over
+        all T positions) is the TPU follow-up and must preserve that
+        bit-equality.
+
+        Returns ``(greedy (B, T) int32, cache)``.
+        """
+        kw = dict(
+            ffn_masks=ffn_masks, compact_layers=compact_layers,
+            block_table=block_table, ffn_block_idx=ffn_block_idx,
+            ffn_block_size=ffn_block_size,
+        )
+        cache_len = jnp.asarray(cache_len, jnp.int32)
+
+        def body(carry, tok):
+            cache, clen = carry
+            logits, cache = self.decode_step(params, tok[:, None], cache, clen, **kw)
+            g = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1).astype(jnp.int32)
+            return (cache, clen + 1), g
+
+        (cache, _), greedy = jax.lax.scan(
+            body, (cache, cache_len), jnp.swapaxes(tokens, 0, 1)
+        )
+        return jnp.swapaxes(greedy, 0, 1), cache
+
     def init_cache(self, batch: int, max_len: int):
         cfg = self.cfg
         dt = cfg.compute_dtype

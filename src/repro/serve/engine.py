@@ -46,10 +46,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.fusion import GlassConfig
-from ..core.glass import build_masks, compact_params
+from ..core.glass import build_masks, build_tiered_masks, compact_params
 from ..models.api import Model
 from .kv_pool import BlockPool, KVPool, clear_slot_leaf, pow2_bucket as _pow2_bucket
-from .lifecycle import Lifecycle, LiveRequest, PreemptionConfig, ReqState, preemption_kind
+from .lifecycle import (
+    Lifecycle,
+    LiveRequest,
+    PreemptionConfig,
+    ReqState,
+    SpecCheckpoint,
+    preemption_kind,
+)
 from .sampling import sample
 from .scheduler import AdmissionPolicy, FinishedRequest, Request, Scheduler
 
@@ -224,11 +231,17 @@ class GlassSlotState:
         self.prior = prior
         self.mode = mode
         self.max_slots = max_slots
+        # tiered (self-speculative) serving: a second arena holds the DRAFT
+        # tier's rows — same selection machinery at density * draft_ratio,
+        # built from the same fused scores so draft units nest in the target
+        self.tiered = gcfg.draft_ratio is not None
         # slot axis in both the stacked rows and the arena: after the leading
         # L axis everywhere except hybrid compact weights (no L axis at all)
         self.slot_axis = 0 if (model.cfg.family == "hybrid" and mode == "compact") else 1
         self.arena = None
+        self.draft_arena = None
         ax = self.slot_axis
+        tiered = self.tiered
 
         def write(arena, rows, slots):
             # one scatter for ALL slots admitted this tick (slots (B,) int32)
@@ -241,8 +254,7 @@ class GlassSlotState:
         def clear(arena, slot):
             return jax.tree.map(lambda a: clear_slot_leaf(a, ax, slot), arena)
 
-        def rows(params, prior, stacked):
-            ms = build_masks(stacked, prior, gcfg, slot_axis=True)
+        def tier_rows(params, ms):
             if mode == "masked":
                 # hybrid keeps the (1, B, m) MaskSet layout: rank (not shape)
                 # distinguishes per-slot from the legacy shared (1, m) mask
@@ -250,6 +262,13 @@ class GlassSlotState:
             if mode == "block_sparse":
                 return ms.idx  # (L, B, nb_keep) int32 active block ids
             return compact_params(model, params, ms.idx)
+
+        def rows(params, prior, stacked):
+            if tiered:
+                ms, ds = build_tiered_masks(stacked, prior, gcfg, slot_axis=True)
+                return tier_rows(params, ms), tier_rows(params, ds)
+            ms = build_masks(stacked, prior, gcfg, slot_axis=True)
+            return tier_rows(params, ms), None
 
         def save(arena, slot):
             return jax.tree.map(
@@ -264,41 +283,57 @@ class GlassSlotState:
         self._clear = jax.jit(clear, donate_argnums=(0,))
         self._save = jax.jit(save)
 
-    def admit(self, slots: List[int], stats_list):
-        """Fuse stats -> per-slot rows, scatter them into the arena, and
-        return the freshly built rows (slot axis length ``len(slots)``) so
-        the engine can derive host-side keys (e.g. active-block lists for
-        the shared-list kernel grouping) without re-reading the arena."""
+    def _init_arena(self, rows):
         ax = self.slot_axis
+        return jax.tree.map(
+            lambda r: jnp.zeros(r.shape[:ax] + (self.max_slots,) + r.shape[ax + 1 :], r.dtype),
+            rows,
+        )
+
+    def admit(self, slots: List[int], stats_list):
+        """Fuse stats -> per-slot rows (both tiers when ``draft_ratio`` is
+        set), scatter them into the arena(s), and return the freshly built
+        TARGET rows (slot axis length ``len(slots)``) so the engine can
+        derive host-side keys (e.g. active-block lists for the shared-list
+        kernel grouping) without re-reading the arena."""
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *stats_list)
-        rows = self._rows(self.params, self.prior, stacked)
+        rows, drows = self._rows(self.params, self.prior, stacked)
+        idx = jnp.asarray(slots, jnp.int32)
         if self.arena is None:
-            self.arena = jax.tree.map(
-                lambda r: jnp.zeros(r.shape[:ax] + (self.max_slots,) + r.shape[ax + 1 :], r.dtype),
-                rows,
-            )
-        self.arena = self._write(self.arena, rows, jnp.asarray(slots, jnp.int32))
+            self.arena = self._init_arena(rows)
+        self.arena = self._write(self.arena, rows, idx)
+        if self.tiered:
+            if self.draft_arena is None:
+                self.draft_arena = self._init_arena(drows)
+            self.draft_arena = self._write(self.draft_arena, drows, idx)
         return rows
 
     def save(self, slot: int):
-        """Device copy of the slot's rows (swap-out keeps GLASS state)."""
+        """Device copy of the slot's rows, both tiers (swap-out keeps GLASS
+        state)."""
         if self.arena is None:
             return None
-        return self._save(self.arena, jnp.int32(slot))
+        draft = self._save(self.draft_arena, jnp.int32(slot)) if self.tiered else None
+        return (self._save(self.arena, jnp.int32(slot)), draft)
 
     def restore(self, slot: int, rows) -> None:
         """Write back rows captured by :meth:`save` at a (new) slot."""
         if rows is None:
             return
-        self.arena = self._write(self.arena, rows, jnp.asarray([slot], jnp.int32))
+        target, draft = rows
+        self.arena = self._write(self.arena, target, jnp.asarray([slot], jnp.int32))
+        if draft is not None:
+            self.draft_arena = self._write(self.draft_arena, draft, jnp.asarray([slot], jnp.int32))
 
     def clear(self, slot: int) -> None:
-        """Zero the slot's row.  A zero mask / zero compact gather makes the
-        FFN contribution of an inactive slot exactly zero — cheap hygiene on
-        top of the engine never reading inactive slots' logits."""
-        if self.arena is None:
-            return
-        self.arena = self._clear(self.arena, jnp.int32(slot))
+        """Zero the slot's row in every tier's arena.  A zero mask / zero
+        compact gather makes the FFN contribution of an inactive slot
+        exactly zero — cheap hygiene on top of the engine never reading
+        inactive slots' logits."""
+        if self.arena is not None:
+            self.arena = self._clear(self.arena, jnp.int32(slot))
+        if self.draft_arena is not None:
+            self.draft_arena = self._clear(self.draft_arena, jnp.int32(slot))
 
 
 class _QueueEngineBase:
@@ -593,6 +628,20 @@ class PagedEngine(_QueueEngineBase):
       * **admission** — ``AdmissionPolicy`` (FIFO / priority / deadline),
         best-effort under block availability net of the watermark reserve
         and the blocks owed to swapped-out requests awaiting swap-in.
+      * **speculative decode** (``spec_k > 0``, greedy only) — the same
+        weights under a more aggressive GLASS tier
+        (``GlassConfig(draft_ratio=...)``, per-slot tiered masks built once
+        at prefill finalize) draft ``k`` tokens per round in one fused
+        scan; the target tier verifies all ``k + 1`` positions through the
+        forced-token (ftoks/fmask) scan — the pre-override argmax at each
+        step IS the target verdict — and the longest matching prefix plus
+        one bonus token is accepted.  Rejected rows are un-scattered,
+        speculative block growth is released in reverse order, and
+        recurrent-state carries are replayed from the pre-draft checkpoint,
+        so the pool is BIT-identical to never having speculated (the
+        state-invariant suite in ``tests/test_speculative_decode.py``
+        enforces exactly that, including through mid-speculation
+        preemption).
 
     ``PagedEngine.step`` itself is a thin driver: each tick it asks the
     lifecycle for this tick's swap-in, admission, prefill, and decode
@@ -616,6 +665,7 @@ class PagedEngine(_QueueEngineBase):
         policy: AdmissionPolicy = AdmissionPolicy.FIFO,
         alloc_mode: str = "incremental",  # incremental | full
         preemption: Optional[PreemptionConfig] = None,
+        spec_k: int = 0,  # draft tokens per speculative round (0 = off)
         temperature: float = 0.0,
         top_k: int = 0,
         rng: Optional[jax.Array] = None,
@@ -629,6 +679,20 @@ class PagedEngine(_QueueEngineBase):
             raise ValueError(f"chunk_tokens must be >= 1, got {chunk_tokens}")
         if alloc_mode not in ("incremental", "full"):
             raise ValueError(f"unknown alloc_mode {alloc_mode!r}")
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        if spec_k:
+            if glass is None or glass.draft_ratio is None:
+                raise ValueError(
+                    "speculative decode needs GlassConfig(draft_ratio=...) — "
+                    "the draft model IS the same weights under the draft tier"
+                )
+            if temperature > 0.0:
+                raise NotImplementedError(
+                    "speculative decode accepts the longest matching prefix "
+                    "under greedy; temperature sampling needs rejection "
+                    "sampling and is not implemented"
+                )
         self.model = model
         self.params = params
         self.temperature = temperature
@@ -658,6 +722,15 @@ class PagedEngine(_QueueEngineBase):
         self.grouped_rows = 0  # decode row-ticks served by the shared-list kernel
         self.admission_waits: List[int] = []  # first-admission latency per request
         self.decode_chunk = max(1, decode_chunk)
+        # speculative-decode knob + telemetry
+        self.spec_k = spec_k
+        self.spec_ticks = 0  # speculative rounds run
+        self.spec_slot_ticks = 0  # speculative rounds x participating slots
+        self.spec_drafted = 0  # draft tokens proposed
+        self.spec_accepted = 0  # draft tokens accepted by the target tier
+        self.spec_emitted = 0  # tokens emitted by speculative rounds (accepted + bonus)
+        self.spec_rollbacks = 0  # per-slot rounds that rejected >= 1 draft token
+        self.spec_rolled_back_rows = 0  # KV rows un-scattered by rollbacks
         self._rng = rng if rng is not None else jax.random.key(0)
 
         mode = self.glass_slots.mode if self.glass_slots is not None else None
@@ -701,21 +774,27 @@ class PagedEngine(_QueueEngineBase):
                 lg, new = model.decode_step(pr, toks[:, None], arena, lengths, **kw)
                 arena = jax.tree.map(guard, arena, new, axes_t, paged_t) if has_state else new
                 lg = lg[:, -1].astype(jnp.float32)
+                # the pre-override greedy token: under forced re-feeds this
+                # is what the model WOULD emit at each position — exactly the
+                # target-tier verdict the speculative verify pass accepts
+                # draft tokens against
+                greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
                 rng, krng = jax.random.split(rng)
                 if temperature > 0.0:
                     nxt = sample(krng, lg, temperature=temperature, top_k=top_k)
+                    nxt = nxt.astype(jnp.int32)
                 else:
-                    nxt = jnp.argmax(lg, axis=-1)
-                nxt = nxt.astype(jnp.int32)
-                # recompute replay: re-feed the recorded token instead of the
-                # sampled one — KV rebuilds bit-identical, no new sampling
+                    nxt = greedy
+                # recompute replay / speculative verify: re-feed the recorded
+                # token instead of the sampled one — KV rebuilds
+                # bit-identical, no new sampling
                 nxt = jnp.where(fm, ft, nxt)
-                return (arena, lengths + 1, nxt, rng), nxt
+                return (arena, lengths + 1, nxt, rng), (nxt, greedy)
 
-            (arena, _, _, rng), seq = jax.lax.scan(
+            (arena, _, _, rng), (seq, tgt) = jax.lax.scan(
                 body, (arena, lengths, toks, rng), (ftoks, fmask)
             )
-            return seq, arena, rng  # seq (H, B)
+            return seq, tgt, arena, rng  # seq/tgt (H, B)
 
         # the arena is dead after each call — donate so the block pool (and
         # state rows) update in place instead of copying every tick
@@ -778,7 +857,7 @@ class PagedEngine(_QueueEngineBase):
         return [
             e.req
             for e in self.lc.in_state(
-                ReqState.PREFILLING, ReqState.RUNNING,
+                ReqState.PREFILLING, ReqState.RUNNING, ReqState.SPECULATING,
                 ReqState.PREEMPTED_SWAPPED, ReqState.PREEMPTED_RECOMPUTE,
             )
         ]
@@ -835,9 +914,18 @@ class PagedEngine(_QueueEngineBase):
         e.pstats = None
 
     def _preempt(self, e: LiveRequest, kind: Optional[str] = None) -> None:
-        """RUNNING/PREFILLING -> PREEMPTED_{SWAPPED,RECOMPUTE}: release the
-        slot and its blocks; swap keeps a bit-exact host copy, recompute
-        re-queues for a prompt+prefix replay."""
+        """RUNNING/PREFILLING/SPECULATING -> PREEMPTED_{SWAPPED,RECOMPUTE}:
+        release the slot and its blocks; swap keeps a bit-exact host copy,
+        recompute re-queues for a prompt+prefix replay.
+
+        A mid-speculation victim is first rolled back to its last ACCEPTED
+        token.  Without that, ``Scheduler.requeue`` would carry the
+        provisional draft tokens in ``outputs`` into the recompute resume,
+        which replays ``outputs`` as *forced* decode tokens — the stream
+        would contain speculated tokens the target tier never verified (and
+        a swap would capture unverified KV rows + over-held blocks)."""
+        if e.state is ReqState.SPECULATING:
+            self._rollback_speculation(e)
         slot = e.slot
         if e.state is ReqState.PREFILLING:
             kind = "recompute"  # partial prefill: replaying is strictly cheaper
@@ -874,7 +962,10 @@ class PagedEngine(_QueueEngineBase):
         """Pick one victim (scheduler policy, mirror of admission order)
         and preempt it.  Returns False when no victim is available."""
         victims = [
-            v for v in self.lc.in_state(ReqState.RUNNING, ReqState.PREFILLING)
+            v
+            for v in self.lc.in_state(
+                ReqState.RUNNING, ReqState.PREFILLING, ReqState.SPECULATING
+            )
             if v is not protect
         ]
         vr = self.scheduler.select_victim([v.req for v in victims])
@@ -1063,10 +1154,278 @@ class PagedEngine(_QueueEngineBase):
         perm = [s for g in multi for s in g] + rest
         return tuple(len(g) for g in multi), np.asarray(perm, np.int32)
 
+    def _scan_inputs(self, run: List[LiveRequest], H: int):
+        """Fixed-width (``max_slots``) batch arrays for one fused scan over
+        ``run``: decoding mask, per-slot lengths and first tokens, and a
+        gather-width-bucketed block table covering every participant's rows
+        plus ``H`` new ones (non-participants trash-redirected)."""
+        B = self.pool.max_slots
+        decoding = np.zeros((B,), bool)
+        lengths = np.zeros((B,), np.int32)
+        toks = np.zeros((B,), np.int32)
+        for e in run:
+            s = e.slot
+            decoding[s] = True
+            lengths[s] = self.pool.lengths[s]
+            toks[s] = e.pending
+        if self.pool.has_paged:
+            need = int(max(lengths[e.slot] + H for e in run))
+            nb = _pow2_bucket(-(-need // self.pool.block_size), self.pool.nb_max)
+            btab = np.where(
+                decoding[:, None], self.pool.block_table[:, :nb], 0
+            ).astype(np.int32)
+        else:
+            btab = np.zeros((B, 1), np.int32)
+        return decoding, lengths, toks, btab
+
+    # -- speculative decode (draft tier -> multi-token verify -> rollback) ---
+
+    def _spec_possible(self, run: List[LiveRequest]) -> int:
+        """Draft length for this round: bounded by every participant's
+        remaining token budget — a round emits up to k+1 tokens per slot
+        and its verify writes k+1 KV rows, which must stay inside the
+        request's row need (``len(prompt) + max_new - 1`` rows, validated
+        at submit, also bounds the block table).  Returns 0 when this tick
+        must run the plain decode path instead (speculation off, a
+        recompute replay still re-feeding forced tokens, or a participant
+        within one token of finishing)."""
+        if not self.spec_k or not run:
+            return 0
+        if any(e.replay_left for e in run):
+            return 0
+        rem = min(e.req.max_new - len(e.outputs) for e in run)
+        return max(0, min(self.spec_k, rem - 1))
+
+    def _spec_capacity(self, run: List[LiveRequest], k: int) -> int:
+        """Reserve ``k + 1`` KV rows of growth for every participant,
+        halving ``k`` under block pressure (mirroring the fused-decode
+        horizon shrink).  Never preempts: if even ``k = 1`` (2 rows of
+        growth per slot) does not fit, it returns 0 and this tick falls
+        back to plain decode, whose H=1 needs HALF the growth — evicting a
+        victim here would drop work the non-speculative engine would have
+        kept running (the plain path escalates to preemption itself only
+        when 1 row per slot still does not fit)."""
+        if not (self.pool.has_paged and self.alloc_mode == "incremental"):
+            return k  # full-need admission reserved the worst case
+        while k > 1 and self._growth_need(run, k + 1) > self.pool.n_free_blocks:
+            k //= 2
+        if self._growth_need(run, k + 1) > self.pool.n_free_blocks:
+            return 0
+        for e in run:
+            ok = self.pool.ensure_capacity(e.slot, int(self.pool.lengths[e.slot]) + k + 1)
+            assert ok, "speculative growth fit was just established"
+        return k
+
+    def _spec_draft(self, run: List[LiveRequest], k: int) -> None:
+        """Checkpoint every participant (RUNNING -> SPECULATING) and propose
+        ``k`` draft tokens per slot under the DRAFT tier in one fused scan.
+
+        Draft KV rows land in the request's real blocks — the verify pass
+        overwrites every one of them with target-tier values, so no draft
+        numerics survive — and draft-advanced recurrent state is restored
+        from the checkpoint before verification.  Draft tokens are appended
+        to ``outputs`` PROVISIONALLY (``spec_len`` marks them): nothing may
+        read them as ground truth until the target tier accepts them."""
+        for e in run:
+            n = int(self.pool.lengths[e.slot])
+            e.spec_ckpt = SpecCheckpoint(
+                rows=n, ensured=n + k + 1, out_len=len(e.outputs),
+                pending=e.pending, state_rows=self.pool.save_state_rows(e.slot),
+            )
+            self.lc.to(e, ReqState.SPECULATING)
+        decoding, lengths, toks, btab = self._scan_inputs(run, k + 1)
+        B = self.pool.max_slots
+        seq, _, arena, self._rng = self._decode(
+            self.params, self.pool.cache, jnp.asarray(lengths), jnp.asarray(toks),
+            jnp.asarray(btab), jnp.asarray(decoding), self.glass_slots.draft_arena,
+            jnp.zeros((k, B), jnp.int32), jnp.zeros((k, B), bool),
+            jnp.zeros((B,), jnp.int32), self._rng, (),
+        )
+        self.pool.cache = arena
+        seq = np.asarray(seq)  # (k, B) draft proposals d_1..d_k
+        for e in run:
+            e.outputs.extend(int(x) for x in seq[:, e.slot])
+            e.spec_len = k
+
+    def _spec_verify(self, run: List[LiveRequest], k: int,
+                     finished: List[FinishedRequest]) -> None:
+        """Target-tier verification of all ``k + 1`` positions in ONE
+        forced-token scan — the recompute-replay machinery re-purposed:
+        step ``j`` feeds the round's j-th input token (``pending`` then the
+        drafts) and the scan's pre-override argmax IS the target verdict
+        ``t_j``.  Accept the longest prefix with ``d_{j+1} == t_j`` plus
+        the bonus token ``t_a``, then roll back everything past the
+        accepted frontier: fix up recurrent state from the pre-draft
+        carry, un-scatter rejected KV rows, release speculative blocks."""
+        has_state = self.pool.has_state
+        if has_state:
+            # the draft advanced recurrent state k steps under the draft
+            # tier; verification must start from the pre-draft carry
+            for e in run:
+                self.pool.restore_state_rows(e.slot, e.spec_ckpt.state_rows)
+        decoding, lengths, toks, btab = self._scan_inputs(run, k + 1)
+        B = self.pool.max_slots
+        ftoks = np.zeros((k + 1, B), np.int32)
+        fmask = np.zeros((k + 1, B), bool)
+        for e in run:
+            ck = e.spec_ckpt
+            toks[e.slot] = ck.pending  # unchanged during draft, but explicit
+            for j in range(k):
+                ftoks[j, e.slot] = e.outputs[ck.out_len + j]
+                fmask[j, e.slot] = True
+        groups, perm = self._ffn_grouping(run)
+        if perm is None:
+            perm = np.zeros((B,), np.int32)
+        _, tgt, arena, self._rng = self._decode(
+            self.params, self.pool.cache, jnp.asarray(lengths), jnp.asarray(toks),
+            jnp.asarray(btab), jnp.asarray(decoding), self.glass_slots.arena,
+            jnp.asarray(ftoks), jnp.asarray(fmask), jnp.asarray(perm),
+            self._rng, groups,
+        )
+        self.pool.cache = arena
+        tgt = np.asarray(tgt)  # (k+1, B) target-tier greedy verdicts
+        self.spec_ticks += 1
+        self.spec_slot_ticks += len(run)
+        self.spec_drafted += k * len(run)
+        fixups: Dict[int, List[Tuple[int, SpecCheckpoint, List[int]]]] = {}
+        for e in run:
+            s = e.slot
+            ck = e.spec_ckpt
+            drafts = e.outputs[ck.out_len :]
+            a = 0
+            while a < k and drafts[a] == int(tgt[a, s]):
+                a += 1
+            accepted = [int(tgt[j, s]) for j in range(a + 1)]
+            if a < k:
+                self.spec_rollbacks += 1
+                self.spec_rolled_back_rows += ck.ensured - (ck.rows + a + 1)
+                if has_state:
+                    # a rolled-back slot can never be the one finishing
+                    # (finish needs a+1 == remaining >= k+1, i.e. a == k),
+                    # so deferring the fix-up past _finish below is safe
+                    fixups.setdefault(a + 1, []).append((s, ck, accepted))
+            self.pool.rollback_rows(s, ck.rows + a + 1, ck.ensured)
+            if self.alloc_mode == "incremental":
+                # full-need admission reserved (and keeps) the whole
+                # footprint — shrinking would free blocks nothing ever
+                # re-allocates, sending later KV writes to the trash block
+                self.pool.shrink_to(s, ck.rows + a + 1)
+            self.pool.lengths[s] = ck.rows + a + 1
+            del e.outputs[ck.out_len :]
+            e.outputs.extend(accepted)
+            e.pending = accepted[-1]
+            e.spec_len = 0
+            e.spec_ckpt = None
+            self.lc.to(e, ReqState.RUNNING)
+            self.spec_accepted += a
+            self.spec_emitted += a + 1
+            if len(e.outputs) >= e.req.max_new:
+                self._finish(s, finished)
+        for H, group in sorted(fixups.items()):
+            self._spec_state_fixup(H, group)
+
+    def _spec_state_fixup(
+        self, H: int, group: List[Tuple[int, SpecCheckpoint, List[int]]]
+    ) -> None:
+        """Recurrent families only: the verify scan advanced the state
+        ``k + 1`` steps but a rolled-back slot only had ``H = a + 1`` real
+        feeds.  Restore each slot's pre-draft carry and replay exactly the
+        accepted feeds (forced) through the same scan body — the state
+        lands bit-identical to never having speculated.  Slots that share
+        an accepted length batch into ONE scan; the scan length must equal
+        the feed count, so the jit variants are bounded by ``spec_k + 1``
+        (they cannot be pow2-bucketed like the gather widths — padding
+        would advance the state past the accepted frontier).  The replay
+        rewrites accepted KV rows with identical values (the rejected rows
+        it would have read are excluded by the ``kv_len`` mask, so the
+        earlier un-scatter does not perturb it); every other slot's table
+        entry is trash-redirected and its state row is guarded by the
+        decoding mask, so nothing else moves."""
+        B = self.pool.max_slots
+        decoding = np.zeros((B,), bool)
+        lengths = np.zeros((B,), np.int32)
+        toks = np.zeros((B,), np.int32)
+        ftoks = np.zeros((H, B), np.int32)
+        fmask = np.zeros((H, B), bool)
+        rows_max = 1
+        for slot, ck, accepted in group:
+            self.pool.restore_state_rows(slot, ck.state_rows)
+            decoding[slot] = True
+            lengths[slot] = ck.rows
+            toks[slot] = ck.pending
+            rows_max = max(rows_max, ck.rows + H)
+            for j in range(H - 1):
+                ftoks[j, slot] = accepted[j]
+                fmask[j, slot] = True
+        if self.pool.has_paged:
+            nb = _pow2_bucket(-(-rows_max // self.pool.block_size), self.pool.nb_max)
+            btab = np.where(
+                decoding[:, None], self.pool.block_table[:, :nb], 0
+            ).astype(np.int32)
+        else:
+            btab = np.zeros((B, 1), np.int32)
+        _, _, arena, self._rng = self._decode(
+            self.params, self.pool.cache, jnp.asarray(lengths), jnp.asarray(toks),
+            jnp.asarray(btab), jnp.asarray(decoding), self.glass_slots.arena,
+            jnp.asarray(ftoks), jnp.asarray(fmask),
+            jnp.zeros((B,), jnp.int32), self._rng, (),
+        )
+        self.pool.cache = arena
+
+    def _rollback_speculation(self, e: LiveRequest) -> None:
+        """SPECULATING -> RUNNING by discarding the round entirely: restore
+        the pre-draft state carry, un-scatter every row the round wrote,
+        release speculative block growth (reverse order, so the allocator
+        stack is exactly pre-speculation), and slice the provisional draft
+        tokens off ``outputs`` — downstream consumers (swap stores,
+        recompute's forced-token replay) must only ever see accepted
+        tokens."""
+        ck = e.spec_ckpt
+        self.pool.restore_state_rows(e.slot, ck.state_rows)
+        self.pool.rollback_rows(e.slot, ck.rows, ck.ensured)
+        if self.alloc_mode == "incremental":
+            # see _spec_verify: full-need reservations must stay allocated
+            self.pool.shrink_to(e.slot, ck.rows)
+        self.pool.lengths[e.slot] = ck.rows
+        self.spec_rolled_back_rows += ck.ensured - ck.rows
+        self.spec_rollbacks += 1
+        del e.outputs[ck.out_len :]
+        e.pending = ck.pending
+        e.spec_len = 0
+        e.spec_ckpt = None
+        self.lc.to(e, ReqState.RUNNING)
+
+    @property
+    def spec_telemetry(self) -> Dict[str, float]:
+        """Speculative-decode acceptance and rollback counters."""
+        return dict(
+            spec_ticks=self.spec_ticks,
+            drafted_tokens=self.spec_drafted,
+            accepted_tokens=self.spec_accepted,
+            emitted_tokens=self.spec_emitted,
+            draft_acceptance_rate=self.spec_accepted / max(self.spec_drafted, 1),
+            accepted_tokens_per_tick=self.spec_emitted / max(self.spec_slot_ticks, 1),
+            rollbacks=self.spec_rollbacks,
+            rolled_back_rows=self.spec_rolled_back_rows,
+        )
+
     def _decode_tick(self, finished: List[FinishedRequest], prefill_pending: bool) -> bool:
         run = self.lc.in_state(ReqState.RUNNING)
         if not run:
             return False
+        k = self._spec_possible(run)
+        if k:
+            k = self._spec_capacity(run, k)
+        if k:
+            self._spec_draft(run, k)
+            self._spec_verify(run, k, finished)
+            # occupancy telemetry: a speculative round runs 2k+1 scan steps
+            # (k draft + k+1 verify) per participating slot; memory
+            # integrates post-rollback holdings for this tick
+            self.slot_steps += (2 * k + 1) * len(run)
+            self.kv_row_ticks += self.pool.blocks_in_use * self.pool.block_size
+            self.t += 1
+            return True
         H = self._horizon(prefill_pending)
         if self.pool.has_paged and self.alloc_mode == "incremental":
             # shrink the fused chunk before shrinking the working set: a
@@ -1083,35 +1442,22 @@ class PagedEngine(_QueueEngineBase):
                 ok = self.pool.ensure_capacity(e.slot, int(self.pool.lengths[e.slot]) + H)
                 assert ok, "growth fit was just established"
         B = self.pool.max_slots
-        decoding = np.zeros((B,), bool)
-        lengths = np.zeros((B,), np.int32)
-        toks = np.zeros((B,), np.int32)
+        decoding, lengths, toks, btab = self._scan_inputs(run, H)
         ftoks = np.zeros((H, B), np.int32)
         fmask = np.zeros((H, B), bool)
         for e in run:
             s = e.slot
-            decoding[s] = True
-            lengths[s] = self.pool.lengths[s]
-            toks[s] = e.pending
             f = min(H, e.replay_left)
             if f:  # forced re-feeds: outputs[k - replay_left : ...]
                 start = len(e.outputs) - e.replay_left
                 for j in range(f):
                     ftoks[j, s] = e.outputs[start + j]
                     fmask[j, s] = True
-        if self.pool.has_paged:
-            need = int(max(lengths[e.slot] + H for e in run))
-            nb = _pow2_bucket(-(-need // self.pool.block_size), self.pool.nb_max)
-            btab = np.where(
-                decoding[:, None], self.pool.block_table[:, :nb], 0
-            ).astype(np.int32)
-        else:
-            btab = np.zeros((B, 1), np.int32)
         groups, perm = self._ffn_grouping(run)
         if perm is None:
             perm = np.zeros((B,), np.int32)  # unused when groups == ()
         extra = self.glass_slots.arena if self.glass_slots is not None else None
-        seq, arena, self._rng = self._decode(
+        seq, _, arena, self._rng = self._decode(
             self.params, self.pool.cache, jnp.asarray(lengths), jnp.asarray(toks),
             jnp.asarray(btab), jnp.asarray(decoding), extra,
             jnp.asarray(ftoks), jnp.asarray(fmask), jnp.asarray(perm),

@@ -315,6 +315,41 @@ class BlockPool:
         self._swap_gather = jax.jit(swap_gather)
         self._swap_scatter = jax.jit(swap_scatter, donate_argnums=(0,))
 
+        def state_save(arena, slot):
+            # state leaves: the slot's row; paged leaves: an empty slice so
+            # the pytree structure round-trips through save/restore
+            def one(a, ax, pg):
+                if pg:
+                    return jax.lax.slice_in_dim(a, 0, 0, axis=0)
+                return jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=ax)
+
+            return jax.tree.map(one, arena, self.axes, self.paged)
+
+        def state_restore(arena, rows, slot):
+            def one(a, r, ax, pg):
+                if pg:
+                    return a
+                starts = [jnp.int32(0)] * a.ndim
+                starts[ax] = slot
+                return jax.lax.dynamic_update_slice(a, r.astype(a.dtype), starts)
+
+            return jax.tree.map(one, arena, rows, self.axes, self.paged)
+
+        def zero_rows(arena, pages, offs):
+            # un-scatter: zero the addressed (page, offset) KV rows; state
+            # leaves pass through (they roll back via the state checkpoint)
+            def one(a, ax, pg):
+                if not pg:
+                    return a
+                idx = (slice(None),) * ax + (pages, offs)
+                return a.at[idx].set(jnp.zeros((), a.dtype))
+
+            return jax.tree.map(one, arena, self.axes, self.paged)
+
+        self._state_save = jax.jit(state_save)
+        self._state_restore = jax.jit(state_restore, donate_argnums=(0,))
+        self._zero_rows = jax.jit(zero_rows, donate_argnums=(0,))
+
     # -- accounting ---------------------------------------------------------
 
     @property
@@ -351,6 +386,67 @@ class BlockPool:
 
     def held_blocks(self, slot: int) -> int:
         return len(self._held.get(slot, ()))
+
+    @property
+    def has_state(self) -> bool:
+        """True when the cache has recurrent-state leaves (rwkv/mamba/conv)
+        that live in the per-slot arena rather than the paged blocks."""
+        return not all(jax.tree.leaves(self.paged))
+
+    # -- speculative rollback -----------------------------------------------
+
+    def save_state_rows(self, slot: int):
+        """Device checkpoint of ``slot``'s recurrent-state rows (the
+        pre-draft state carry).  Returns None for pure-KV families."""
+        if not self.has_state:
+            return None
+        return self._state_save(self.cache, jnp.int32(slot))
+
+    def restore_state_rows(self, slot: int, rows) -> None:
+        """Write back rows captured by :meth:`save_state_rows`."""
+        if rows is None:
+            return
+        self.cache = self._state_restore(self.cache, rows, jnp.int32(slot))
+
+    def rollback_rows(self, slot: int, start: int, end: int) -> None:
+        """Un-scatter speculated KV rows: zero logical rows ``[start, end)``
+        of ``slot`` through its block table.  The addressed pages must still
+        be held by the slot (zero before :meth:`shrink_to`, not after).  The
+        row list is padded to a power of two with trash-block redirects
+        (block 0, offset 0) so the jitted scatter compiles O(log) variants —
+        zeroing the trash block is harmless by definition."""
+        if not self.has_paged or end <= start:
+            return
+        if not self.active[slot]:
+            raise ValueError(f"slot {slot} is not active")
+        bs = self.block_size
+        pages = [int(self.block_table[slot, r // bs]) for r in range(start, end)]
+        offs = [r % bs for r in range(start, end)]
+        p = pow2_bucket(len(pages), max(1, self.nb_max * bs))
+        pages += [BlockAllocator.TRASH] * (p - len(pages))
+        offs += [0] * (p - len(offs))
+        self.cache = self._zero_rows(
+            self.cache, jnp.asarray(pages, jnp.int32), jnp.asarray(offs, jnp.int32)
+        )
+
+    def shrink_to(self, slot: int, rows: int) -> None:
+        """Release blocks allocated past ``rows`` KV rows (speculative
+        growth that rejection rolled back).  Blocks are freed in REVERSE
+        allocation order so the allocator's free stack returns to exactly
+        its pre-speculation state — a never-speculated pool and a
+        rolled-back one hand out identical block ids from here on."""
+        if not self.has_paged:
+            return
+        if not self.active[slot]:
+            raise ValueError(f"slot {slot} is not active")
+        need = max(self.blocks_needed(rows), 0)
+        held = self._held[slot]
+        if len(held) <= need:
+            return
+        extra = held[need:]
+        del held[need:]
+        self.block_table[slot, need : need + len(extra)] = 0
+        self.allocator.free(list(reversed(extra)))
 
     # -- request lifecycle --------------------------------------------------
 

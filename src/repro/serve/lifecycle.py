@@ -3,15 +3,24 @@
 Every request the :class:`~repro.serve.engine.PagedEngine` touches owns one
 :class:`LiveRequest` entry that moves through an explicit state machine::
 
-    WAITING ──▶ PREFILLING ──▶ RUNNING ──▶ FINISHED
-                   │   ▲          │  ▲
+    WAITING ──▶ PREFILLING ──▶ RUNNING ◀──▶ SPECULATING
+                   │   ▲          │  ▲      (draft k + verify k+1; commit
+                   │   │          │  │       or rollback returns to RUNNING)
                    │   │          │  │ (swap-in restores KV bit-exact)
                    │   │          ▼  │
-                   │   │   PREEMPTED_SWAPPED
+                   │   │   PREEMPTED_SWAPPED          RUNNING ──▶ FINISHED
                    │   │          │
                    │   │          ▼ (requeue; replay prompt + generated
                    │   └── PREEMPTED_RECOMPUTE     prefix through prefill)
                    └──────────────▲
+
+``SPECULATING`` is the self-speculative decode sub-phase: the slot holds
+*unverified* draft KV rows, provisionally extended outputs, and possibly
+blocks allocated past the accepted frontier.  It can only exit back to
+RUNNING — the engine rolls the speculation back to the last accepted token
+(restore the pre-draft state carry, un-scatter rejected rows, release
+speculative blocks, slice provisional outputs) before any preemption or
+finish, so swap/recompute resume paths never see speculated state.
 
 All resource transitions (slot binding, block allocation, swap stores,
 GLASS per-slot rows) happen *at* a state transition, never ad hoc: the
@@ -53,6 +62,7 @@ class ReqState(str, Enum):
     WAITING = "waiting"
     PREFILLING = "prefilling"
     RUNNING = "running"
+    SPECULATING = "speculating"
     PREEMPTED_SWAPPED = "preempted_swapped"
     PREEMPTED_RECOMPUTE = "preempted_recompute"
     FINISHED = "finished"
@@ -66,13 +76,39 @@ _LEGAL = {
     },
     ReqState.RUNNING: {
         ReqState.FINISHED,
+        ReqState.SPECULATING,
         ReqState.PREEMPTED_SWAPPED,
         ReqState.PREEMPTED_RECOMPUTE,
     },
+    # SPECULATING is a sub-phase of RUNNING: the slot carries unverified
+    # draft rows / provisional outputs.  The ONLY legal exit is back to
+    # RUNNING (after commit or a full speculation rollback) — preempting,
+    # finishing, or swapping a mid-speculation request directly would leak
+    # speculated KV rows, blocks, and provisional tokens into the resume
+    # path, so the engine must roll the speculation back first.
+    ReqState.SPECULATING: {ReqState.RUNNING},
     ReqState.PREEMPTED_SWAPPED: {ReqState.RUNNING},
     ReqState.PREEMPTED_RECOMPUTE: {ReqState.PREFILLING},
     ReqState.FINISHED: set(),
 }
+
+
+@dataclass
+class SpecCheckpoint:
+    """Everything needed to roll a request back to its last *accepted*
+    token: taken when the request enters SPECULATING, dropped at commit.
+
+    ``rows``/``out_len``/``pending`` snapshot the host-side progress;
+    ``ensured`` is the KV-row capacity the speculative round reserved (the
+    rollback zeroes ``[rows, ensured)`` and shrinks holdings back to
+    ``rows``); ``state_rows`` is the device copy of the recurrent-state
+    rows (the pre-draft state carry — None for pure-KV families)."""
+
+    rows: int  # pool lengths[slot] at speculation entry
+    ensured: int  # KV rows the round ensured capacity for (rows + k + 1)
+    out_len: int  # len(outputs) at speculation entry
+    pending: int  # next token to feed at speculation entry
+    state_rows: Any = None
 
 
 @dataclass
@@ -95,6 +131,12 @@ class LiveRequest:
     admitted_step: int = -1  # latest admission (for prefill ordering)
     first_admitted_step: int = -1  # first admission (admission-latency metric)
     preemptions: int = 0
+    # speculative decode: provisional draft tokens currently appended to
+    # ``outputs`` (unverified — anything reading outputs as ground truth,
+    # e.g. recompute's forced-token replay, must slice them off first) and
+    # the rollback checkpoint while SPECULATING
+    spec_len: int = 0
+    spec_ckpt: Optional[SpecCheckpoint] = None
 
     @property
     def uid(self) -> int:
@@ -134,7 +176,9 @@ class Lifecycle:
 
     def by_slot(self, slot: int) -> LiveRequest:
         for e in self.entries.values():
-            if e.slot == slot and e.state in (ReqState.PREFILLING, ReqState.RUNNING):
+            if e.slot == slot and e.state in (
+                ReqState.PREFILLING, ReqState.RUNNING, ReqState.SPECULATING
+            ):
                 return e
         raise KeyError(f"no live entry bound to slot {slot}")
 

@@ -89,8 +89,17 @@ class Scheduler:
         """Re-queue a preempted-for-recompute request.  Feasibility was
         validated at the original submit and ``_submit_seq`` is preserved,
         so the request keeps its place in the policy order instead of
-        going to the back of the FIFO tie-break."""
+        going to the back of the FIFO tie-break.
+
+        CAUTION: on re-admission the engine replays the request's recorded
+        ``outputs`` as *forced* decode tokens.  The caller must therefore
+        roll back any speculative state first — a mid-speculation victim
+        requeued with provisional draft tokens still in ``outputs`` would
+        replay tokens the target tier never verified (the engine's
+        ``_rollback_speculation`` slices them off before ever reaching
+        here)."""
         assert hasattr(req, "_submit_seq"), "requeue() is for previously submitted requests"
+        assert all(q is not req for q in self.queue), "request is already queued"
         self.queue.append(req)
 
     def __len__(self) -> int:

@@ -17,6 +17,15 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "speculative: self-speculative decode suite (tiered GLASS draft/verify "
+        "+ state-invariant rollback checks); CI runs it as its own lane under "
+        "SPEC_GLASS_MODE=fused and SPEC_GLASS_MODE=block_sparse",
+    )
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.key(0)
