@@ -1,56 +1,72 @@
-"""Queue-driven serving demo: staggered requests through the
-continuous-batching engine, per-request GLASS masks, dense-agreement and
-paper fidelity metrics.
+"""Streaming serving demo: the per-request generation API.
+
+Staggered requests flow through ``PagedEngine.add_request`` with their own
+``SamplingParams`` (greedy or seeded counter-based sampling) and
+``GlassParams`` (per-request density / speculative draft length); tokens
+are printed AS THEY ARRIVE from ``engine.step()``'s RequestOutput deltas,
+one request finishes early on a stop token, and one is aborted mid-flight.
+The dense-agreement and paper-fidelity metrics follow.
 
     PYTHONPATH=src:. python examples/serve_glass.py
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import TINY_LLAMA, build_bundle, sparse_eval_logits
 from benchmarks.metrics import dense_trajectory_ppl, top100_kld
-from repro.core import GlassConfig
-from repro.serve.engine import ContinuousEngine
-from repro.serve.scheduler import Request
+from repro.core import GlassConfig, GlassParams
+from repro.serve.engine import PagedEngine
+from repro.serve.sampling import SamplingParams
 
 b = build_bundle(TINY_LLAMA, n_samples=8)
 model, params = b.model, b.params
 
-print("== continuous batching: 8 staggered requests, 3 slots ==")
+print("== streaming frontend: mixed per-request policies, 3 slots ==")
 rng = np.random.RandomState(0)
-requests = [
-    Request(
-        uid=i,
-        prompt=np.asarray(seq[0, :8], np.int32),
-        max_new=int(rng.randint(8, 24)),
-        arrival=int(3 * i // 2),  # requests trickle in while others decode
-    )
-    for i, seq in enumerate(b.sequences)
-]
-
-eng_dense = ContinuousEngine(model, params, max_slots=3, max_len=48)
-eng_glass = ContinuousEngine(
-    model, params, max_slots=3, max_len=48,
-    glass=GlassConfig(density=0.5), global_prior=b.priors["I_nps"],
+eng = PagedEngine(
+    model, params, max_slots=3, max_len=48, block_size=8, chunk_tokens=8,
+    glass=GlassConfig(density=0.5, draft_ratio=0.5),
+    global_prior=b.priors["I_nps"],
 )
-done_d = eng_dense.run([Request(r.uid, r.prompt, r.max_new, r.arrival) for r in requests])
-done_g = eng_glass.run(requests)
 
-agree_total = 0
-tok_total = 0
-for r in requests:
-    d, g = done_d[r.uid], done_g[r.uid]
-    agree = int(np.sum(d.tokens == g.tokens))
-    agree_total += agree
-    tok_total += r.max_new
-    print(
-        f"req {r.uid}: arrived t={r.arrival:2d} admitted t={g.admitted_step:2d} "
-        f"finished t={g.finished_step:2d}  {r.max_new:2d} tokens  "
-        f"dense-agreement {agree}/{r.max_new}"
+# one policy per request: greedy, seeded-sampled, half-density, speculative
+policies = [
+    ("greedy, eos=35  ", SamplingParams.make_greedy(eos_token_id=35), None),
+    ("sampled seed=7  ", SamplingParams(temperature=0.9, top_k=40, seed=7), None),
+    ("density 0.25    ", None, GlassParams(density=0.25, spec_k=0)),
+    ("speculative k=2 ", None, GlassParams(spec_k=2)),
+    ("sampled seed=11 ", SamplingParams(temperature=1.1, seed=11), None),
+    ("greedy          ", None, None),
+]
+uids = {}
+for i, seq in enumerate(b.sequences[: len(policies)]):
+    name, sp, gp = policies[i]
+    uid = eng.add_request(
+        np.asarray(seq[0, :8], np.int32), int(rng.randint(8, 24)),
+        sampling=sp, glass=gp, arrival=3 * i // 2,
     )
-print(f"engine drained in {eng_glass.t} steps; "
-      f"greedy token agreement dense vs GLASS@50%: {agree_total / tok_total:.2%}")
+    uids[uid] = name
+
+aborted = False
+while eng._work_remaining():
+    for out in eng.step():
+        if out.finished:
+            print(f"req {out.uid} [{uids[out.uid]}] FINISHED "
+                  f"({out.finish_reason}) t={out.finished_step:3d}  "
+                  f"{out.tokens.shape[0]:2d} tokens")
+        elif len(out.new_tokens):
+            # tokens stream in as they are accepted (speculative rounds can
+            # deliver several per tick)
+            print(f"req {out.uid} [{uids[out.uid]}] t={eng.t:3d}  "
+                  f"+{[int(x) for x in out.new_tokens]}")
+    if not aborted and eng.t >= 8 and 5 in eng.lc.entries:
+        out = eng.abort(5)
+        if out is not None:
+            print(f"req 5 [{uids[5]}] ABORTED  ({out.tokens.shape[0]} tokens kept)")
+        aborted = True
+
+print(f"engine drained in {eng.t} steps; "
+      f"speculative rounds: {eng.spec_ticks}, "
+      f"draft acceptance: {eng.spec_telemetry['draft_acceptance_rate']:.2f}")
 
 print("== fidelity vs dense trajectory (paper metrics) ==")
 for name, lam in [("GRIFFIN (local-only)", 0.0), ("GLASS (fused)", 0.5)]:

@@ -1,16 +1,18 @@
 from .fusion import GlassConfig, glass_scores, jaccard, ranks_ascending, select
 from .glass import (
+    GlassParams,
     MaskSet,
     build_masks,
     build_tiered_masks,
     compact_params,
     compute_global_prior,
+    reselect_at_density,
 )
 from .nps import NPSConfig, nps_corpus, teacher_forced_batch
 
 __all__ = [
-    "GlassConfig", "MaskSet", "NPSConfig",
+    "GlassConfig", "GlassParams", "MaskSet", "NPSConfig",
     "build_masks", "build_tiered_masks", "compact_params", "compute_global_prior",
-    "glass_scores", "jaccard", "nps_corpus", "ranks_ascending", "select",
-    "teacher_forced_batch",
+    "glass_scores", "jaccard", "nps_corpus", "ranks_ascending",
+    "reselect_at_density", "select", "teacher_forced_batch",
 ]

@@ -14,7 +14,7 @@ Typical deployment flow (paper Fig. 2):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, Optional
 
 import jax
@@ -26,6 +26,49 @@ from ..models.moe import compact_moe_params
 from . import importance
 from .fusion import GlassConfig, glass_scores, select
 from .nps import NPSConfig, nps_corpus, teacher_forced_batch
+
+
+@dataclass(frozen=True)
+class GlassParams:
+    """Request-scoped GLASS policy: the per-request view of
+    :class:`~repro.core.fusion.GlassConfig`.
+
+    Every field defaults to None = "inherit the engine's config".  The
+    engine config acts as the *capacity tier*: a request's density (and
+    draft density, ``density * draft_ratio``) may be at most the engine's
+    — per-request selections at a lower density NEST inside the capacity
+    selection (same fused scores, same stable tie-break; the
+    :func:`build_tiered_masks` nesting argument), which is what lets one
+    fixed-shape slot arena serve mixed densities.  ``spec_k`` is the
+    request's draft length per speculative round (0 = never speculate;
+    requests with different spec_k share a tick — the round drafts the
+    minimum).
+    """
+
+    density: Optional[float] = None
+    draft_ratio: Optional[float] = None
+    spec_k: Optional[int] = None
+
+    def __post_init__(self):
+        if self.density is not None and not (0.0 < self.density <= 1.0):
+            raise ValueError(f"density must be in (0, 1], got {self.density}")
+        if self.draft_ratio is not None and not (0.0 < self.draft_ratio <= 1.0):
+            raise ValueError(f"draft_ratio must be in (0, 1], got {self.draft_ratio}")
+        if self.spec_k is not None and self.spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {self.spec_k}")
+
+    def resolve(self, gcfg: Optional[GlassConfig], spec_k_default: int
+                ) -> "GlassParams":
+        """Fill None fields from the engine's config -> a fully concrete
+        GlassParams (density/draft_ratio still None when the engine serves
+        dense / has no draft tier)."""
+        return GlassParams(
+            density=self.density if self.density is not None
+            else (gcfg.density if gcfg is not None else None),
+            draft_ratio=self.draft_ratio if self.draft_ratio is not None
+            else (gcfg.draft_ratio if gcfg is not None else None),
+            spec_k=self.spec_k if self.spec_k is not None else spec_k_default,
+        )
 
 
 @dataclass(frozen=True)
@@ -139,6 +182,17 @@ def build_tiered_masks(
     ms = build_masks(local_stats, global_prior, gcfg)
     didx, dmask = select(ms.scores, gcfg.draft_config())
     return ms, MaskSet(idx=didx, mask=dmask, scores=ms.scores)
+
+
+def reselect_at_density(ms: MaskSet, gcfg: GlassConfig, density: float) -> MaskSet:
+    """Re-select from an existing MaskSet's fused scores at a different
+    density — no stats or prior needed.  Because both selections rank the
+    IDENTICAL scores with the same stable tie-break, the lower-density
+    selection always NESTS inside the higher one (the
+    :func:`build_tiered_masks` argument): the basis of per-request
+    densities sharing one fixed-capacity slot arena."""
+    didx, dmask = select(ms.scores, replace(gcfg, density=density, draft_ratio=None))
+    return MaskSet(idx=didx, mask=dmask, scores=ms.scores)
 
 
 def compact_params(model: Model, params, idx: jax.Array):

@@ -159,6 +159,31 @@ def make_decode_step(model: Model, greedy: bool = True):
     return decode
 
 
+def make_decode_step_sampled(model: Model):
+    """Per-slot sampled decode with the counter-based positional PRNG —
+    the jittable program behind the per-request ``SamplingParams`` API.
+
+    Returns ``decode(params, cache, token, cache_len, seeds, pos,
+    temperature, top_k, greedy_mask) -> (next_token (B, 1), cache)``:
+    row ``b`` draws token ``pos[b]`` of request ``seeds[b]``'s stream
+    (``sample_positional`` keys on exactly that pair, so replaying a
+    position regenerates the same token), or the argmax where
+    ``greedy_mask`` is set.  All sampling inputs are traced (B,) vectors —
+    one compiled program serves any mix of greedy and sampled requests."""
+    from ..serve.sampling import sample_positional
+
+    def decode(params, cache, token, cache_len, seeds, pos, temperature,
+               top_k, greedy_mask):
+        logits, cache = model.decode_step(params, token, cache, cache_len)
+        lg = logits[:, -1].astype(jnp.float32)
+        g = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        s = sample_positional(lg, seeds, pos, temperature, top_k)
+        nxt = jnp.where(greedy_mask, g, s).astype(jnp.int32)[:, None]
+        return nxt, cache
+
+    return decode
+
+
 def make_decode_step_masked(model: Model):
     """Masked decode (no compaction): GLASS as a multiplier mask — the jnp
     reference for the block-sparse kernel path."""

@@ -177,10 +177,15 @@ class Model:
         block_table=None,
         ffn_block_idx=None,
         ffn_block_size: int = 128,
+        seeds=None,  # (B,) int32: per-slot sampling seeds -> sampled verdicts
+        pos0=None,  # (B,) int32 generated position of the FIRST verdict
+        temperature=None,  # (B,) f32
+        top_k=None,  # (B,) int32
+        greedy_mask=None,  # (B,) bool: rows that verdict by argmax regardless
     ):
         """Multi-token verification: feed ``tokens[:, j]`` sequentially
         through :meth:`decode_step` inside ONE ``lax.scan``, returning each
-        position's greedy argmax and the advanced cache.
+        position's verdict token and the advanced cache.
 
         This is the model-level primitive behind self-speculative decoding:
         feed ``[pending, d_1 .. d_k]`` under the TARGET tier's masks and
@@ -193,7 +198,16 @@ class Model:
         all T positions) is the TPU follow-up and must preserve that
         bit-equality.
 
-        Returns ``(greedy (B, T) int32, cache)``.
+        The verdict is the greedy argmax by default.  With ``seeds``/
+        ``pos0``/``temperature``/``top_k`` given, it is the **counter-based
+        positional sample** from the same pre-override logits
+        (:func:`repro.serve.sampling.sample_positional` keyed on
+        ``(seed, pos0 + j)``) — a pure function of (seed, position,
+        logits), so a draft/verify pair under sampling is exactly as
+        replayable as under greedy; ``greedy_mask`` rows keep the argmax
+        verdict (mixed batches).
+
+        Returns ``(verdicts (B, T) int32, cache)``.
         """
         kw = dict(
             ffn_masks=ffn_masks, compact_layers=compact_layers,
@@ -201,17 +215,29 @@ class Model:
             ffn_block_size=ffn_block_size,
         )
         cache_len = jnp.asarray(cache_len, jnp.int32)
+        sampled = seeds is not None
+        if sampled:
+            from ..serve.sampling import sample_positional
 
-        def body(carry, tok):
-            cache, clen = carry
+            pos0 = jnp.asarray(pos0, jnp.int32)
+            if greedy_mask is None:
+                greedy_mask = jnp.zeros(seeds.shape, bool)
+
+        def body(carry, xs):
+            cache, clen, j = carry
+            tok = xs
             logits, cache = self.decode_step(params, tok[:, None], cache, clen, **kw)
-            g = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1).astype(jnp.int32)
-            return (cache, clen + 1), g
+            lg = logits[:, -1].astype(jnp.float32)
+            g = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            if sampled:
+                s = sample_positional(lg, seeds, pos0 + j, temperature, top_k)
+                g = jnp.where(greedy_mask, g, s)
+            return (cache, clen + 1, j + 1), g
 
-        (cache, _), greedy = jax.lax.scan(
-            body, (cache, cache_len), jnp.swapaxes(tokens, 0, 1)
+        (cache, _, _), verdicts = jax.lax.scan(
+            body, (cache, cache_len, jnp.int32(0)), jnp.swapaxes(tokens, 0, 1)
         )
-        return jnp.swapaxes(greedy, 0, 1), cache
+        return jnp.swapaxes(verdicts, 0, 1), cache
 
     def init_cache(self, batch: int, max_len: int):
         cfg = self.cfg

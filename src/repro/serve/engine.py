@@ -37,7 +37,9 @@ execution of the mask, reading only active weight tiles from HBM.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import itertools
+import warnings
+from dataclasses import dataclass, replace
 from functools import partial
 from typing import Dict, List, Optional, Tuple
 
@@ -46,7 +48,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.fusion import GlassConfig
-from ..core.glass import build_masks, build_tiered_masks, compact_params
+from ..core.glass import (
+    GlassParams,
+    build_masks,
+    build_tiered_masks,
+    compact_params,
+    reselect_at_density,
+)
 from ..models.api import Model
 from .kv_pool import BlockPool, KVPool, clear_slot_leaf, pow2_bucket as _pow2_bucket
 from .lifecycle import (
@@ -57,8 +65,14 @@ from .lifecycle import (
     SpecCheckpoint,
     preemption_kind,
 )
-from .sampling import sample
-from .scheduler import AdmissionPolicy, FinishedRequest, Request, Scheduler
+from .sampling import MAX_STOP_IDS, SamplingParams, sample, sample_positional
+from .scheduler import (
+    AdmissionPolicy,
+    FinishedRequest,
+    Request,
+    RequestOutput,
+    Scheduler,
+)
 
 
 @dataclass
@@ -282,6 +296,85 @@ class GlassSlotState:
         self._write = jax.jit(write, donate_argnums=(0,))
         self._clear = jax.jit(clear, donate_argnums=(0,))
         self._save = jax.jit(save)
+        # per-request density variants (GlassParams): jit cache keyed on the
+        # (density, draft_density) pair — bounded by the distinct densities
+        # the engine actually serves
+        self._override_jits: Dict[tuple, object] = {}
+
+    def _override_fn(self, density: float, draft_density: Optional[float]):
+        """Row builder for a request whose densities differ from the engine
+        config.  The engine config is the CAPACITY tier: per-request
+        selections at a lower density nest inside it (same fused scores,
+        same stable tie-break), so
+
+          * ``masked`` builds the float mask directly at the request's own
+            density (the arena is density-agnostic);
+          * ``compact`` gathers at the capacity tier and ZEROES the
+            down-projection rows (``w_down`` / rwkv ``wv``) of units
+            outside the request's own selection — the unit's contribution
+            becomes exactly zero, so the fixed-``k`` arena row computes the
+            request's lower-density FFN bit-for-bit;
+          * ``block_sparse`` has no zero mechanism inside the streaming
+            kernel, so per-request densities are rejected at add_request.
+        """
+        key = (density, draft_density)
+        fn = self._override_jits.get(key)
+        if fn is not None:
+            return fn
+        if self.mode == "block_sparse":
+            raise NotImplementedError(
+                "per-request density needs glass_mode='masked' or 'compact' — "
+                "the block-sparse kernel streams whole listed tiles and has "
+                "no way to zero a padding block's contribution"
+            )
+        model, gcfg, mode, tiered = self.model, self.gcfg, self.mode, self.tiered
+        hybrid = model.cfg.family == "hybrid"
+
+        def restrict(rows_dict, valid):
+            # zero the down-projection rows of gathered units outside the
+            # request's nested selection; every other leaf may stay — any
+            # path through the unit ends in the zeroed projection
+            if hybrid:
+                valid = valid[0]  # compact_params drops the shared L=1 axis
+            return {
+                k2: (v * valid[..., None].astype(v.dtype)
+                     if k2 in ("w_down", "wv") else v)
+                for k2, v in rows_dict.items()
+            }
+
+        def one_compact_tier(params, ms_cap, cap_density, req_density):
+            rows_t = compact_params(model, params, ms_cap.idx)
+            if req_density < cap_density - 1e-12:
+                req_mask = reselect_at_density(ms_cap, gcfg, req_density).mask
+                valid = jnp.take_along_axis(req_mask, ms_cap.idx, axis=-1)
+                rows_t = restrict(rows_t, valid)
+            return rows_t
+
+        def rows(params, prior, stacked):
+            if mode == "masked":
+                ms = build_masks(
+                    stacked, prior,
+                    replace(gcfg, density=density, draft_ratio=None),
+                    slot_axis=True,
+                )
+                dmask = None
+                if tiered:
+                    dmask = reselect_at_density(ms, gcfg, draft_density).mask
+                return ms.mask, dmask
+            if tiered:
+                ms_cap, ds_cap = build_tiered_masks(stacked, prior, gcfg,
+                                                    slot_axis=True)
+                tgt = one_compact_tier(params, ms_cap, gcfg.density, density)
+                dft = one_compact_tier(
+                    params, ds_cap, gcfg.density * gcfg.draft_ratio, draft_density
+                )
+                return tgt, dft
+            ms_cap = build_masks(stacked, prior, gcfg, slot_axis=True)
+            return one_compact_tier(params, ms_cap, gcfg.density, density), None
+
+        fn = jax.jit(rows)
+        self._override_jits[key] = fn
+        return fn
 
     def _init_arena(self, rows):
         ax = self.slot_axis
@@ -290,12 +383,35 @@ class GlassSlotState:
             rows,
         )
 
-    def admit(self, slots: List[int], stats_list):
+    def admit(self, slots: List[int], stats_list, overrides=None):
         """Fuse stats -> per-slot rows (both tiers when ``draft_ratio`` is
         set), scatter them into the arena(s), and return the freshly built
         TARGET rows (slot axis length ``len(slots)``) so the engine can
         derive host-side keys (e.g. active-block lists for the shared-list
-        kernel grouping) without re-reading the arena."""
+        kernel grouping) without re-reading the arena.
+
+        ``overrides`` (optional, one entry per slot) carries a request's
+        ``(density, draft_density)`` when it differs from the engine
+        config — see :meth:`_override_fn` for how a lower density shares
+        the fixed-capacity arena.  ``None`` entries take the engine-default
+        (bit-identical to the pre-override build path).  The override path
+        is single-slot (the paged engine finalizes one request per prefill
+        chunk); batch admission with overrides would need per-slot row
+        stacking to honor the return contract."""
+        if overrides is not None and any(o is not None for o in overrides):
+            assert len(overrides) == len(slots) == 1, "override admits are single-slot"
+            (slot,), (st,), (ov,) = slots, stats_list, overrides
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *[st])
+            rows, drows = self._override_fn(*ov)(self.params, self.prior, stacked)
+            idx = jnp.asarray([slot], jnp.int32)
+            if self.arena is None:
+                self.arena = self._init_arena(rows)
+            self.arena = self._write(self.arena, rows, idx)
+            if self.tiered:
+                if self.draft_arena is None:
+                    self.draft_arena = self._init_arena(drows)
+                self.draft_arena = self._write(self.draft_arena, drows, idx)
+            return rows
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *stats_list)
         rows, drows = self._rows(self.params, self.prior, stacked)
         idx = jnp.asarray(slots, jnp.int32)
@@ -389,7 +505,10 @@ class _QueueEngineBase:
         return bool(len(self.scheduler) or self.pool.active.any())
 
     def run(self, requests=(), max_steps: Optional[int] = None) -> Dict[int, FinishedRequest]:
-        """Serve until queue and slots drain; returns {uid: FinishedRequest}."""
+        """Serve until queue and slots drain; returns {uid: finished output}
+        (legacy ``FinishedRequest``, or the structurally-superset final
+        ``RequestOutput`` from the streaming paged engine — streaming
+        deltas are filtered out here)."""
         for r in requests:
             self.submit(r)  # the subclass's validation applies
         if max_steps is None:
@@ -405,7 +524,8 @@ class _QueueEngineBase:
                     f"{type(self).__name__} did not drain in {max_steps} steps"
                 )
             for f in self.step():
-                done[f.uid] = f
+                if getattr(f, "finished", True):
+                    done[f.uid] = f
         return done
 
 
@@ -611,11 +731,12 @@ class PagedEngine(_QueueEngineBase):
         request re-queued; the prompt replays through chunked prefill —
         running-sum GLASS stats rebuild the identical fused mask — and the
         generated prefix re-feeds through decode as forced tokens).  Both
-        paths resume with zero token-stream divergence under greedy
-        decoding; with a temperature, replay shifts the engine-global RNG
-        stream, so sampled streams stay deterministic given ``rng`` but
-        are not preemption-transparent (they were never
-        scheduling-transparent either).
+        paths resume with zero token-stream divergence for greedy AND
+        seeded-sampled requests: sampling is counter-based (every draw is
+        a pure function of (request seed, generated position, logits) —
+        see ``serve.sampling.sample_positional``), so replay regenerates
+        the stream bit-identically and no engine-global RNG state exists
+        to shift.
       * **prefill** — prompts are processed in chunks of at most
         ``chunk_tokens`` per engine tick, interleaved with decode; the
         fused mask is built once, at the final chunk.
@@ -628,20 +749,32 @@ class PagedEngine(_QueueEngineBase):
       * **admission** — ``AdmissionPolicy`` (FIFO / priority / deadline),
         best-effort under block availability net of the watermark reserve
         and the blocks owed to swapped-out requests awaiting swap-in.
-      * **speculative decode** (``spec_k > 0``, greedy only) — the same
+      * **speculative decode** (``spec_k > 0``, per request) — the same
         weights under a more aggressive GLASS tier
         (``GlassConfig(draft_ratio=...)``, per-slot tiered masks built once
         at prefill finalize) draft ``k`` tokens per round in one fused
         scan; the target tier verifies all ``k + 1`` positions through the
-        forced-token (ftoks/fmask) scan — the pre-override argmax at each
-        step IS the target verdict — and the longest matching prefix plus
-        one bonus token is accepted.  Rejected rows are un-scattered,
-        speculative block growth is released in reverse order, and
-        recurrent-state carries are replayed from the pre-draft checkpoint,
-        so the pool is BIT-identical to never having speculated (the
-        state-invariant suite in ``tests/test_speculative_decode.py``
-        enforces exactly that, including through mid-speculation
-        preemption).
+        forced-token (ftoks/fmask) scan — the pre-override verdict at each
+        step (argmax, or the positional sample for seeded requests) IS the
+        target verdict — and the longest matching prefix plus one bonus
+        token is accepted.  Rejected rows are un-scattered, speculative
+        block growth is released in reverse order, and recurrent-state
+        carries are replayed from the pre-draft checkpoint, so the pool is
+        BIT-identical to never having speculated (the state-invariant
+        suite in ``tests/test_speculative_decode.py`` enforces exactly
+        that, including through mid-speculation preemption).  Requests
+        with ``GlassParams(spec_k=0)`` interleave with speculating ones in
+        the same tick via a plain decode over the non-participants.
+
+    **Per-request generation API** (the streaming frontend): submit with
+    :meth:`add_request` under request-scoped :class:`SamplingParams`
+    (counter-based seeded sampling, EOS/stop sets detected inside the
+    fused scan) and :class:`GlassParams` (density / draft_ratio / spec_k
+    against the engine's capacity tier); consume
+    :class:`~repro.serve.scheduler.RequestOutput` deltas from every
+    :meth:`step`; cancel with :meth:`abort`.  The legacy
+    ``submit(Request)`` / ``run(requests)`` pair keeps working (greedy at
+    engine defaults) behind a DeprecationWarning.
 
     ``PagedEngine.step`` itself is a thin driver: each tick it asks the
     lifecycle for this tick's swap-in, admission, prefill, and decode
@@ -665,11 +798,12 @@ class PagedEngine(_QueueEngineBase):
         policy: AdmissionPolicy = AdmissionPolicy.FIFO,
         alloc_mode: str = "incremental",  # incremental | full
         preemption: Optional[PreemptionConfig] = None,
-        spec_k: int = 0,  # draft tokens per speculative round (0 = off)
-        temperature: float = 0.0,
+        spec_k: int = 0,  # default draft tokens per speculative round (0 = off)
+        temperature: float = 0.0,  # legacy engine-global default (see sampling)
         top_k: int = 0,
-        rng: Optional[jax.Array] = None,
+        rng: Optional[jax.Array] = None,  # unused: sampling is counter-based
         decode_chunk: int = 8,  # max ticks fused into one jitted scan
+        sampling: Optional[SamplingParams] = None,  # default SamplingParams
     ):
         if glass is not None:
             assert global_prior is not None, "GLASS needs the offline prior"
@@ -681,22 +815,39 @@ class PagedEngine(_QueueEngineBase):
             raise ValueError(f"unknown alloc_mode {alloc_mode!r}")
         if spec_k < 0:
             raise ValueError(f"spec_k must be >= 0, got {spec_k}")
-        if spec_k:
-            if glass is None or glass.draft_ratio is None:
-                raise ValueError(
-                    "speculative decode needs GlassConfig(draft_ratio=...) — "
-                    "the draft model IS the same weights under the draft tier"
-                )
-            if temperature > 0.0:
-                raise NotImplementedError(
-                    "speculative decode accepts the longest matching prefix "
-                    "under greedy; temperature sampling needs rejection "
-                    "sampling and is not implemented"
-                )
+        if spec_k and (glass is None or glass.draft_ratio is None):
+            raise ValueError(
+                "speculative decode needs GlassConfig(draft_ratio=...) — "
+                "the draft model IS the same weights under the draft tier"
+            )
         self.model = model
         self.params = params
         self.temperature = temperature
         self.top_k = top_k
+        # the default per-request sampling policy: requests submitted without
+        # SamplingParams inherit it.  The legacy engine-global
+        # (temperature, top_k) pair maps onto it — with a temperature, each
+        # request gets a stable uid-derived seed, so the "global" setting is
+        # served by per-request counter-based streams (reproducible through
+        # preemption/replay, unlike the old shared RNG stream).
+        if sampling is not None:
+            self.default_sampling = sampling
+        elif temperature <= 0.0:
+            self.default_sampling = SamplingParams.make_greedy()
+        else:
+            self.default_sampling = None  # per-uid seed derived at submit
+        if rng is not None:
+            warnings.warn(
+                "PagedEngine(rng=...) is ignored: sampling is counter-based "
+                "per request — pass SamplingParams(seed=...) (per request or "
+                "as the engine `sampling` default) to vary streams",
+                DeprecationWarning, stacklevel=2,
+            )
+        self._auto_uid = itertools.count()
+        self._used_uids: set = set()  # every uid ever submitted (auto-uid guard)
+        # per-uid (SamplingParams, GlassParams) resolved at submit; consumed
+        # at admission, dropped at finish/abort
+        self._policies: Dict[int, Tuple[SamplingParams, GlassParams]] = {}
         self.chunk_tokens = chunk_tokens
         self.alloc_mode = alloc_mode
         self.preempt_cfg = preemption if preemption is not None else PreemptionConfig()
@@ -731,7 +882,6 @@ class PagedEngine(_QueueEngineBase):
         self.spec_emitted = 0  # tokens emitted by speculative rounds (accepted + bonus)
         self.spec_rollbacks = 0  # per-slot rounds that rejected >= 1 draft token
         self.spec_rolled_back_rows = 0  # KV rows un-scattered by rollbacks
-        self._rng = rng if rng is not None else jax.random.key(0)
 
         mode = self.glass_slots.mode if self.glass_slots is not None else None
         self._mode = mode
@@ -742,8 +892,15 @@ class PagedEngine(_QueueEngineBase):
 
         # the fused horizon H is carried by the (H, B) leading axis of
         # ftoks/fmask — the scan length and the per-H jit variants key off
-        # that shape, so no separate static argument is needed
-        def dec(pr, arena, lengths, toks, btab, dmask, extra, ftoks, fmask, perm, rng, groups):
+        # that shape, so no separate static argument is needed.  All
+        # per-request policy rides in traced (B,) vectors: pos0 (the
+        # counter-based PRNG position of each slot's first emission this
+        # scan), seeds/temp/topk/gmask (SamplingParams), and stop_ids
+        # (the per-slot early-finish stop set, -1 padded).  ``sampled``
+        # is the only policy static: an all-greedy batch compiles without
+        # any sampling ops, preserving the PR-4 greedy program exactly.
+        def dec(pr, arena, lengths, toks, btab, dmask, extra, ftoks, fmask,
+                perm, pos0, seeds, temp, topk, gmask, stop_ids, groups, sampled):
             kw = {}
             if mode == "masked":
                 kw["ffn_masks"] = extra
@@ -770,35 +927,42 @@ class PagedEngine(_QueueEngineBase):
 
             def body(carry, xs):
                 ft, fm = xs
-                arena, lengths, toks, rng = carry
+                arena, lengths, pos, toks = carry
                 lg, new = model.decode_step(pr, toks[:, None], arena, lengths, **kw)
                 arena = jax.tree.map(guard, arena, new, axes_t, paged_t) if has_state else new
                 lg = lg[:, -1].astype(jnp.float32)
-                # the pre-override greedy token: under forced re-feeds this
-                # is what the model WOULD emit at each position — exactly the
-                # target-tier verdict the speculative verify pass accepts
-                # draft tokens against
+                # the pre-override verdict: what the model WOULD emit at this
+                # position — greedy argmax, or (for seeded slots) the
+                # counter-based positional sample, a pure function of
+                # (seed, position, logits).  Under forced re-feeds this is
+                # exactly the target-tier verdict the speculative verify
+                # pass accepts draft tokens against — greedy and sampled
+                # requests alike.
                 greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-                rng, krng = jax.random.split(rng)
-                if temperature > 0.0:
-                    nxt = sample(krng, lg, temperature=temperature, top_k=top_k)
-                    nxt = nxt.astype(jnp.int32)
+                if sampled:
+                    samp = sample_positional(lg, seeds, pos, temp, topk)
+                    verdict = jnp.where(gmask, greedy, samp)
                 else:
-                    nxt = greedy
+                    verdict = greedy
                 # recompute replay / speculative verify: re-feed the recorded
-                # token instead of the sampled one — KV rebuilds
-                # bit-identical, no new sampling
-                nxt = jnp.where(fm, ft, nxt)
-                return (arena, lengths + 1, nxt, rng), (nxt, greedy)
+                # token instead of the fresh verdict — KV rebuilds
+                # bit-identical (the positional draw would regenerate the
+                # same token anyway; the override makes it structural)
+                nxt = jnp.where(fm, ft, verdict)
+                # early-finish detection inside the scan: the emitted token
+                # against the slot's stop set (eos + stop ids, -1 padded);
+                # forced re-feeds never re-trigger a stop
+                hit = jnp.any(nxt[:, None] == stop_ids, axis=-1) & ~fm
+                return (arena, lengths + 1, pos + 1, nxt), (nxt, verdict, hit)
 
-            (arena, _, _, rng), (seq, tgt) = jax.lax.scan(
-                body, (arena, lengths, toks, rng), (ftoks, fmask)
+            (arena, _, _, _), (seq, tgt, hits) = jax.lax.scan(
+                body, (arena, lengths, pos0, toks), (ftoks, fmask)
             )
-            return seq, tgt, arena, rng  # seq/tgt (H, B)
+            return seq, tgt, hits, arena  # seq/tgt/hits (H, B)
 
         # the arena is dead after each call — donate so the block pool (and
         # state rows) update in place instead of copying every tick
-        self._decode = jax.jit(dec, static_argnums=(11,), donate_argnums=(1,))
+        self._decode = jax.jit(dec, static_argnums=(16, 17), donate_argnums=(1,))
 
         axes, paged = self.pool.axes, self.pool.paged
 
@@ -827,7 +991,60 @@ class PagedEngine(_QueueEngineBase):
 
     # -- public API ---------------------------------------------------------
 
+    def add_request(
+        self,
+        prompt,
+        max_new: int,
+        *,
+        sampling: Optional[SamplingParams] = None,
+        glass: Optional[GlassParams] = None,
+        uid: Optional[int] = None,
+        arrival: Optional[int] = None,
+        priority: int = 0,
+        deadline: Optional[int] = None,
+    ) -> int:
+        """The streaming frontend entry: enqueue one request under its own
+        :class:`SamplingParams` (temperature / top-k / seed / stop set —
+        ``None`` inherits the engine default, greedy unless configured) and
+        :class:`GlassParams` (density / draft_ratio / spec_k — ``None``
+        fields inherit the engine :class:`GlassConfig`).  Returns the
+        request's uid (auto-assigned when not given).
+
+        Consume results incrementally: every :meth:`step` returns
+        :class:`RequestOutput` deltas for live requests (``new_tokens``)
+        and a final ``finished=True`` output with a ``finish_reason``
+        (``length | stop | eos | aborted``); :meth:`abort` cancels a
+        request in any state, releasing its blocks/slot/GLASS rows through
+        the lifecycle."""
+        if uid is None:
+            # _used_uids covers FINISHED requests too (Lifecycle prunes
+            # their entries): an auto uid must never alias an earlier
+            # request in a uid-keyed consumer's results, even a drained one
+            uid = next(self._auto_uid)
+            while uid in self._used_uids:  # covers queued + in-flight too
+                uid = next(self._auto_uid)
+        req = Request(
+            uid=uid, prompt=np.asarray(prompt, np.int32), max_new=max_new,
+            arrival=self.t if arrival is None else arrival,
+            priority=priority, deadline=deadline,
+            sampling=sampling, glass=glass,
+        )
+        self._submit(req)
+        return uid
+
     def submit(self, req: Request) -> None:
+        """Legacy frontend: a bare :class:`Request` decodes greedy (or the
+        engine-global temperature) at the engine's GLASS config.  Kept as a
+        deprecation shim over :meth:`add_request`."""
+        warnings.warn(
+            "PagedEngine.submit(Request) / run(requests) are the legacy "
+            "frontend; use add_request(...) with SamplingParams/GlassParams "
+            "and consume RequestOutput deltas from step()",
+            DeprecationWarning, stacklevel=2,
+        )
+        self._submit(req)
+
+    def _submit(self, req: Request) -> None:
         need = self.pool.blocks_needed(self._rows_needed(req))
         if self.pool.has_paged and need > self.pool.num_blocks - 1:
             raise ValueError(
@@ -839,7 +1056,124 @@ class PagedEngine(_QueueEngineBase):
         # admission (entries exist only from admission on, hence both checks)
         if req.uid in self.lc.entries or any(q.uid == req.uid for q in self.scheduler.queue):
             raise ValueError(f"request uid {req.uid} is already in flight")
-        super().submit(req)
+        # resolve + validate per-request policy WITHOUT mutating the
+        # caller's Request (the same object may be re-served through a
+        # differently-configured engine); the admission tick binds the
+        # resolved pair onto the LiveRequest entry
+        self._policies[req.uid] = self._resolve_policy(req)
+        self._used_uids.add(req.uid)
+        _QueueEngineBase.submit(self, req)
+
+    def _resolve_policy(self, req: Request) -> Tuple[SamplingParams, GlassParams]:
+        """Resolve + validate the request's per-request policy against the
+        engine defaults (the engine GlassConfig is the *capacity* tier)."""
+        sp = req.sampling
+        if sp is None:
+            if self.default_sampling is not None:
+                sp = self.default_sampling
+            else:
+                # legacy engine-global temperature: a stable uid-derived seed
+                # keeps the stream reproducible through preemption/replay
+                sp = SamplingParams(
+                    temperature=self.temperature, top_k=self.top_k,
+                    seed=(req.uid * 2654435761 + 97) % (2**31 - 1),
+                )
+        gp = (req.glass if req.glass is not None else GlassParams()).resolve(
+            self.glass, self.spec_k
+        )
+        if self.glass is None:
+            if gp.density is not None or gp.draft_ratio is not None:
+                raise ValueError(
+                    f"request {req.uid}: per-request GLASS params need an "
+                    "engine-level GlassConfig (the engine serves dense)"
+                )
+            if gp.spec_k:
+                raise ValueError(
+                    f"request {req.uid}: spec_k > 0 needs an engine "
+                    "GlassConfig(draft_ratio=...) draft tier"
+                )
+            return sp, gp
+        eps = 1e-9
+        if gp.density > self.glass.density + eps:
+            raise ValueError(
+                f"request {req.uid}: density {gp.density} exceeds the engine "
+                f"capacity tier {self.glass.density} (per-request selections "
+                "must nest inside the engine config's)"
+            )
+        if (req.glass is not None and req.glass.draft_ratio is not None
+                and self.glass.draft_ratio is None):
+            # consistent with density: a per-request knob the engine cannot
+            # honor must raise, not silently do nothing
+            raise ValueError(
+                f"request {req.uid}: draft_ratio needs an engine "
+                "GlassConfig(draft_ratio=...) draft arena"
+            )
+        per_density = abs(gp.density - self.glass.density) > eps
+        per_draft = (
+            self.glass.draft_ratio is not None
+            and gp.draft_ratio is not None
+            and abs(gp.density * gp.draft_ratio
+                    - self.glass.density * self.glass.draft_ratio) > eps
+        )
+        if self._mode == "block_sparse" and (per_density or per_draft):
+            raise ValueError(
+                f"request {req.uid}: per-request density needs "
+                "glass_mode='masked' or 'compact' — the block-sparse kernel "
+                "streams whole listed tiles"
+            )
+        if gp.spec_k:
+            if self.glass.draft_ratio is None or gp.draft_ratio is None:
+                raise ValueError(
+                    f"request {req.uid}: spec_k > 0 needs an engine "
+                    "GlassConfig(draft_ratio=...) draft tier"
+                )
+            if (gp.density * gp.draft_ratio
+                    > self.glass.density * self.glass.draft_ratio + eps):
+                raise ValueError(
+                    f"request {req.uid}: draft density "
+                    f"{gp.density * gp.draft_ratio} exceeds the engine draft "
+                    f"capacity {self.glass.density * self.glass.draft_ratio}"
+                )
+        return sp, gp
+
+    def abort(self, uid: int) -> Optional[RequestOutput]:
+        """Cancel a request in any state, releasing every resource it holds
+        through the lifecycle: a queued request is removed, a PREFILLING /
+        RUNNING one frees its slot + blocks + GLASS rows, a SPECULATING one
+        first rolls back its pending drafts (the only legal exit), a
+        swapped one drops its host store, and a recompute-queued one is
+        de-queued.  Returns the final aborted :class:`RequestOutput` (with
+        whatever tokens were accepted so far), or None if the uid is not
+        live."""
+        e = self.lc.entries.get(uid)
+        if e is None:
+            r = self.scheduler.remove(uid)
+            if r is None:
+                return None
+            e = self.lc.add(r)
+            self.lc.to(e, ReqState.FINISHED)
+            self._policies.pop(uid, None)
+            e.finish_reason = "aborted"
+            return self._output(e, finished=True, reason="aborted")
+        if e.state is ReqState.FINISHED:
+            return None
+        if e.state is ReqState.SPECULATING:
+            self._rollback_speculation(e)
+        if e.state in (ReqState.PREFILLING, ReqState.RUNNING):
+            self.pool.free(e.slot)
+            if self.glass_slots is not None:
+                self.glass_slots.clear(e.slot)
+            e.slot = -1
+            e.pstats = None
+        elif e.state is ReqState.PREEMPTED_SWAPPED:
+            e.swap = None
+            e.glass_rows = None
+        elif e.state is ReqState.PREEMPTED_RECOMPUTE:
+            self.scheduler.remove(uid)
+        self.lc.to(e, ReqState.FINISHED)
+        self._policies.pop(uid, None)
+        e.finish_reason = "aborted"
+        return self._output(e, finished=True, reason="aborted")
 
     @property
     def preempt_count(self) -> int:
@@ -892,24 +1226,120 @@ class PagedEngine(_QueueEngineBase):
         reserved = sum(e.swap.n_blocks for e in self.lc.in_state(ReqState.PREEMPTED_SWAPPED))
         return self.pool.fits_admission(self._first_rows(r), reserved)
 
+    # -- per-request policy plumbing ----------------------------------------
+
+    def _first_token_for(self, e: LiveRequest, logits_last: np.ndarray) -> int:
+        """First post-prefill token under the request's own SamplingParams:
+        greedy argmax, or the counter-based positional draw at position 0.
+        Sampled exactly once per request — resume paths re-feed the
+        recorded token instead of redrawing."""
+        sp = e.sp
+        if sp.is_greedy:
+            return int(np.argmax(logits_last))
+        return int(sample_positional(
+            jnp.asarray(logits_last, jnp.float32)[None],
+            jnp.asarray([np.int32(np.uint32(sp.seed))]),
+            jnp.asarray([0], jnp.int32),
+            jnp.asarray([sp.temperature], jnp.float32),
+            jnp.asarray([sp.top_k], jnp.int32),
+        )[0])
+
+    def _glass_override(self, e: LiveRequest):
+        """The (density, draft_density) pair for GlassSlotState.admit when
+        the request's GLASS densities differ from the engine config's, else
+        None (the engine-default build path, bit-identical to PR 4)."""
+        if self.glass is None:
+            return None
+        gp = e.gp
+        d = gp.density if gp.density is not None else self.glass.density
+        dd = None
+        cap_dd = None
+        if self.glass.draft_ratio is not None:
+            cap_dd = self.glass.density * self.glass.draft_ratio
+            dr = gp.draft_ratio if gp.draft_ratio is not None else self.glass.draft_ratio
+            dd = d * dr
+        eps = 1e-9
+        if abs(d - self.glass.density) <= eps and (
+            dd is None or abs(dd - cap_dd) <= eps
+        ):
+            return None
+        return (d, dd)
+
+    def _policy_inputs(self, run: List[LiveRequest], *, with_stops: bool,
+                       H_offset_ckpt: bool = False):
+        """Fixed-width (``max_slots``) per-request policy vectors for one
+        fused scan: the counter-based PRNG position of each slot's first
+        emission, the SamplingParams fields, and the early-finish stop set.
+        ``with_stops=False`` blanks the stop sets (draft/verify/fix-up
+        scans handle stops host-side on the *accepted* tokens only).
+        ``H_offset_ckpt=True`` takes positions from the speculative
+        checkpoint (the verify scan runs after outputs were provisionally
+        extended)."""
+        B = self.pool.max_slots
+        pos0 = np.zeros((B,), np.int32)
+        seeds = np.zeros((B,), np.int32)
+        temp = np.ones((B,), np.float32)
+        topk = np.zeros((B,), np.int32)
+        gmask = np.ones((B,), bool)
+        stop_ids = np.full((B, MAX_STOP_IDS), -1, np.int32)
+        sampled = False
+        for e in run:
+            s = e.slot
+            sp = e.sp
+            if H_offset_ckpt:
+                pos0[s] = e.spec_ckpt.out_len
+            else:
+                pos0[s] = len(e.outputs) - e.replay_left
+            if not sp.is_greedy:
+                sampled = True
+                gmask[s] = False
+                seeds[s] = np.int32(np.uint32(sp.seed))
+                temp[s] = sp.temperature
+                topk[s] = sp.top_k
+            if with_stops:
+                for j, t in enumerate(sp.stop_set):
+                    stop_ids[s, j] = t
+        return pos0, seeds, temp, topk, gmask, stop_ids, sampled
+
     # -- lifecycle transitions ----------------------------------------------
 
-    def _finish(self, slot: int, finished: List[FinishedRequest]) -> None:
-        e = self.lc.by_slot(slot)
-        finished.append(
-            FinishedRequest(
-                uid=e.uid,
-                prompt=np.asarray(e.req.prompt, np.int32),
-                tokens=np.asarray(e.outputs, np.int32),
-                arrival=e.req.arrival,
-                admitted_step=e.first_admitted_step,
-                finished_step=self.t,
-            )
+    def _output(self, e: LiveRequest, *, finished: bool,
+                reason: Optional[str] = None) -> RequestOutput:
+        """Build one streaming update for ``e`` and advance its ``emitted``
+        cursor (``new_tokens`` is everything not yet reported)."""
+        out = RequestOutput(
+            uid=e.uid,
+            prompt=np.asarray(e.req.prompt, np.int32),
+            new_tokens=np.asarray(e.outputs[e.emitted:], np.int32),
+            tokens=np.asarray(e.outputs, np.int32),
+            finished=finished,
+            finish_reason=reason,
+            arrival=e.req.arrival,
+            admitted_step=e.first_admitted_step,
+            finished_step=self.t if finished else -1,
         )
+        e.emitted = len(e.outputs)
+        return out
+
+    def _stop_reason(self, e: LiveRequest, tok: int) -> str:
+        return "eos" if (e.sp is not None and tok == e.sp.eos_token_id) else "stop"
+
+    def _finish(self, slot: int, finished: List[RequestOutput],
+                reason: str = "length") -> None:
+        e = self.lc.by_slot(slot)
+        if e.state is ReqState.SPECULATING:
+            # early-finish leak-class guard: pending drafts (provisional
+            # tokens, speculative blocks, unverified KV rows) must roll
+            # back before FINISHED — SPECULATING's only legal exit is
+            # RUNNING, and the lifecycle enforces it
+            self._rollback_speculation(e)
+        e.finish_reason = reason
+        finished.append(self._output(e, finished=True, reason=reason))
         self.pool.free(slot)
         if self.glass_slots is not None:
             self.glass_slots.clear(slot)
         self.lc.to(e, ReqState.FINISHED)
+        self._policies.pop(e.uid, None)
         e.slot = -1
         e.pstats = None
 
@@ -1014,6 +1444,10 @@ class PagedEngine(_QueueEngineBase):
             e = self.lc.entries.get(r.uid)
             if e is None:
                 e = self.lc.add(r)
+                # per-request policy, resolved at submit (legacy Requests
+                # take the engine defaults); the caller's Request object is
+                # never mutated
+                e.sp, e.gp = self._policies[r.uid]
             slot = self.pool.admit(self._first_rows(r))
             assert slot is not None  # _fits held and a slot was free
             self.lc.to(e, ReqState.PREFILLING)
@@ -1027,7 +1461,7 @@ class PagedEngine(_QueueEngineBase):
 
     # -- tick work ----------------------------------------------------------
 
-    def _prefill_tick(self, finished: List[FinishedRequest]) -> bool:
+    def _prefill_tick(self, finished: List[RequestOutput]) -> bool:
         """Run ONE bounded chunk for the oldest mid-prefill request."""
         pre = self.lc.in_state(ReqState.PREFILLING)
         if not pre:
@@ -1066,7 +1500,9 @@ class PagedEngine(_QueueEngineBase):
         self.max_prefill_tokens_per_tick = max(self.max_prefill_tokens_per_tick, T)
         if pos + T == len(r.prompt):  # final chunk: finalize GLASS + first token
             if self.glass_slots is not None:
-                rows = self.glass_slots.admit([slot], [e.pstats])
+                rows = self.glass_slots.admit(
+                    [slot], [e.pstats], overrides=[self._glass_override(e)]
+                )
                 if self._mode == "block_sparse":
                     # host copy of the (L, nb_keep) active-block list: the
                     # group-by key for the shared-list decode kernel
@@ -1075,15 +1511,20 @@ class PagedEngine(_QueueEngineBase):
             self.lc.to(e, ReqState.RUNNING)
             if e.outputs:
                 # recompute resume: the generated prefix is replayed through
-                # decode as forced tokens — nothing is re-sampled
+                # decode as forced tokens — nothing is re-sampled (and the
+                # counter-based draws would regenerate it bit-identically
+                # anyway)
                 e.pending = e.outputs[0]
                 e.replay_left = len(e.outputs) - 1
             else:
-                first = self._first_token(np.asarray(last[0], np.float32))
+                first = self._first_token_for(e, np.asarray(last[0], np.float32))
                 e.outputs = [first]
                 e.pending = first
-                if len(e.outputs) >= r.max_new:
-                    self._finish(slot, finished)
+                e.rng_pos = 1
+                if first in e.sp.stop_set:
+                    self._finish(slot, finished, self._stop_reason(e, first))
+                elif len(e.outputs) >= r.max_new:
+                    self._finish(slot, finished, "length")
         return True
 
     def _horizon(self, prefill_pending: bool) -> int:
@@ -1180,21 +1621,39 @@ class PagedEngine(_QueueEngineBase):
 
     # -- speculative decode (draft tier -> multi-token verify -> rollback) ---
 
+    def _spec_round(self, run: List[LiveRequest]) -> Tuple[List[LiveRequest], int]:
+        """Participants + draft length for this tick's speculative round.
+
+        Requests opt in per their own ``GlassParams.spec_k`` (engine
+        ``spec_k`` is just the default), so ``spec_k=0`` requests — and
+        recompute replays still re-feeding forced tokens, and requests
+        within one token of finishing — simply sit the round out and take
+        a plain H=1 decode in the SAME tick.  The round's draft length is
+        the minimum over participants of ``min(spec_k, remaining - 1)``: a
+        round emits up to k+1 tokens per slot and its verify writes k+1 KV
+        rows, which must stay inside the request's row need
+        (``len(prompt) + max_new - 1`` rows, validated at submit, also
+        bounds the block table)."""
+        if self.glass_slots is None or not self.glass_slots.tiered or not run:
+            return [], 0
+        parts = [
+            e for e in run
+            if e.gp.spec_k and not e.replay_left
+            and e.req.max_new - len(e.outputs) >= 2
+        ]
+        if not parts:
+            return [], 0
+        k = min(
+            min(e.gp.spec_k, e.req.max_new - len(e.outputs) - 1) for e in parts
+        )
+        return parts, max(0, k)
+
     def _spec_possible(self, run: List[LiveRequest]) -> int:
-        """Draft length for this round: bounded by every participant's
-        remaining token budget — a round emits up to k+1 tokens per slot
-        and its verify writes k+1 KV rows, which must stay inside the
-        request's row need (``len(prompt) + max_new - 1`` rows, validated
-        at submit, also bounds the block table).  Returns 0 when this tick
-        must run the plain decode path instead (speculation off, a
-        recompute replay still re-feeding forced tokens, or a participant
-        within one token of finishing)."""
-        if not self.spec_k or not run:
-            return 0
-        if any(e.replay_left for e in run):
-            return 0
-        rem = min(e.req.max_new - len(e.outputs) for e in run)
-        return max(0, min(self.spec_k, rem - 1))
+        """Compat helper (the state-invariant suite drives rounds by hand):
+        the round's draft length when EVERY member of ``run`` participates,
+        else 0 — the pre-partition semantics of :meth:`_spec_round`."""
+        parts, k = self._spec_round(run)
+        return k if len(parts) == len(run) else 0
 
     def _spec_capacity(self, run: List[LiveRequest], k: int) -> int:
         """Reserve ``k + 1`` KV rows of growth for every participant,
@@ -1234,29 +1693,47 @@ class PagedEngine(_QueueEngineBase):
             )
             self.lc.to(e, ReqState.SPECULATING)
         decoding, lengths, toks, btab = self._scan_inputs(run, k + 1)
+        pos0, seeds, temp, topk, gmask, stop_ids, sampled = self._policy_inputs(
+            run, with_stops=False
+        )
         B = self.pool.max_slots
-        seq, _, arena, self._rng = self._decode(
+        # sampled slots draft with the SAME counter-based keys the target
+        # verdict will use — proposal j for position out_len + j draws key
+        # (seed, out_len + j) from the DRAFT logits, so a proposal matches
+        # the verdict exactly when both tiers would emit the same token
+        seq, _, _, arena = self._decode(
             self.params, self.pool.cache, jnp.asarray(lengths), jnp.asarray(toks),
             jnp.asarray(btab), jnp.asarray(decoding), self.glass_slots.draft_arena,
             jnp.zeros((k, B), jnp.int32), jnp.zeros((k, B), bool),
-            jnp.zeros((B,), jnp.int32), self._rng, (),
+            jnp.zeros((B,), jnp.int32),
+            jnp.asarray(pos0), jnp.asarray(seeds), jnp.asarray(temp),
+            jnp.asarray(topk), jnp.asarray(gmask), jnp.asarray(stop_ids),
+            (), sampled,
         )
         self.pool.cache = arena
         seq = np.asarray(seq)  # (k, B) draft proposals d_1..d_k
         for e in run:
+            # provisional: rng_pos intentionally does NOT advance until the
+            # target tier accepts
             e.outputs.extend(int(x) for x in seq[:, e.slot])
             e.spec_len = k
 
     def _spec_verify(self, run: List[LiveRequest], k: int,
-                     finished: List[FinishedRequest]) -> None:
+                     finished: List[RequestOutput]) -> None:
         """Target-tier verification of all ``k + 1`` positions in ONE
         forced-token scan — the recompute-replay machinery re-purposed:
         step ``j`` feeds the round's j-th input token (``pending`` then the
-        drafts) and the scan's pre-override argmax IS the target verdict
-        ``t_j``.  Accept the longest prefix with ``d_{j+1} == t_j`` plus
-        the bonus token ``t_a``, then roll back everything past the
-        accepted frontier: fix up recurrent state from the pre-draft
-        carry, un-scatter rejected KV rows, release speculative blocks."""
+        drafts) and the scan's pre-override verdict IS the target verdict
+        ``t_j`` — the greedy argmax, or for seeded requests the
+        counter-based positional sample from the pre-override logits (a
+        pure function of (seed, position, logits), so draft/target
+        exactness holds under sampling exactly as under greedy).  Accept
+        the longest prefix with ``d_{j+1} == t_j`` plus the bonus token
+        ``t_a``, then roll back everything past the accepted frontier: fix
+        up recurrent state from the pre-draft carry, un-scatter rejected
+        KV rows, release speculative blocks.  Accepted tokens that hit the
+        request's stop set finish it early (truncated at the stop token,
+        blocks freed this tick)."""
         has_state = self.pool.has_state
         if has_state:
             # the draft advanced recurrent state k steps under the draft
@@ -1264,6 +1741,9 @@ class PagedEngine(_QueueEngineBase):
             for e in run:
                 self.pool.restore_state_rows(e.slot, e.spec_ckpt.state_rows)
         decoding, lengths, toks, btab = self._scan_inputs(run, k + 1)
+        pos0, seeds, temp, topk, gmask, stop_ids, sampled = self._policy_inputs(
+            run, with_stops=False, H_offset_ckpt=True
+        )
         B = self.pool.max_slots
         ftoks = np.zeros((k + 1, B), np.int32)
         fmask = np.zeros((k + 1, B), bool)
@@ -1276,18 +1756,21 @@ class PagedEngine(_QueueEngineBase):
         groups, perm = self._ffn_grouping(run)
         if perm is None:
             perm = np.zeros((B,), np.int32)
-        _, tgt, arena, self._rng = self._decode(
+        _, tgt, _, arena = self._decode(
             self.params, self.pool.cache, jnp.asarray(lengths), jnp.asarray(toks),
             jnp.asarray(btab), jnp.asarray(decoding), self.glass_slots.arena,
             jnp.asarray(ftoks), jnp.asarray(fmask), jnp.asarray(perm),
-            self._rng, groups,
+            jnp.asarray(pos0), jnp.asarray(seeds), jnp.asarray(temp),
+            jnp.asarray(topk), jnp.asarray(gmask), jnp.asarray(stop_ids),
+            groups, sampled,
         )
         self.pool.cache = arena
-        tgt = np.asarray(tgt)  # (k+1, B) target-tier greedy verdicts
+        tgt = np.asarray(tgt)  # (k+1, B) target-tier verdicts
         self.spec_ticks += 1
         self.spec_slot_ticks += len(run)
         self.spec_drafted += k * len(run)
         fixups: Dict[int, List[Tuple[int, SpecCheckpoint, List[int]]]] = {}
+        to_finish: List[Tuple[int, str]] = []
         for e in run:
             s = e.slot
             ck = e.spec_ckpt
@@ -1300,9 +1783,6 @@ class PagedEngine(_QueueEngineBase):
                 self.spec_rollbacks += 1
                 self.spec_rolled_back_rows += ck.ensured - (ck.rows + a + 1)
                 if has_state:
-                    # a rolled-back slot can never be the one finishing
-                    # (finish needs a+1 == remaining >= k+1, i.e. a == k),
-                    # so deferring the fix-up past _finish below is safe
                     fixups.setdefault(a + 1, []).append((s, ck, accepted))
             self.pool.rollback_rows(s, ck.rows + a + 1, ck.ensured)
             if self.alloc_mode == "incremental":
@@ -1314,15 +1794,31 @@ class PagedEngine(_QueueEngineBase):
             del e.outputs[ck.out_len :]
             e.outputs.extend(accepted)
             e.pending = accepted[-1]
+            e.rng_pos = len(e.outputs)  # drafts committed: counter catches up
             e.spec_len = 0
             e.spec_ckpt = None
             self.lc.to(e, ReqState.RUNNING)
-            self.spec_accepted += a
-            self.spec_emitted += a + 1
-            if len(e.outputs) >= e.req.max_new:
-                self._finish(s, finished)
+            stop_i = next(
+                (i for i, t2 in enumerate(accepted) if t2 in e.sp.stop_set), None
+            )
+            # telemetry counts tokens that actually reach the stream: a
+            # stop hit discards the accepted tail, so it must not inflate
+            # the acceptance rate (accepted[a] is the bonus token)
+            kept = len(accepted) if stop_i is None else stop_i + 1
+            self.spec_accepted += min(a, kept)
+            self.spec_emitted += kept
+            if stop_i is not None:
+                del e.outputs[ck.out_len + stop_i + 1 :]
+                e.rng_pos = len(e.outputs)
+                to_finish.append((s, self._stop_reason(e, e.outputs[-1])))
+            elif len(e.outputs) >= e.req.max_new:
+                to_finish.append((s, "length"))
+        # state fix-ups BEFORE finishes: a stop-finishing rolled-back slot
+        # must not have its (freed, zeroed) state row written afterwards
         for H, group in sorted(fixups.items()):
             self._spec_state_fixup(H, group)
+        for s, reason in to_finish:
+            self._finish(s, finished, reason)
 
     def _spec_state_fixup(
         self, H: int, group: List[Tuple[int, SpecCheckpoint, List[int]]]
@@ -1364,11 +1860,17 @@ class PagedEngine(_QueueEngineBase):
             ).astype(np.int32)
         else:
             btab = np.zeros((B, 1), np.int32)
-        _, _, arena, self._rng = self._decode(
+        # sampled=False: the replay's emissions are discarded (every real
+        # feed is forced), so the greedy-compiled variant serves it
+        _, _, _, arena = self._decode(
             self.params, self.pool.cache, jnp.asarray(lengths), jnp.asarray(toks),
             jnp.asarray(btab), jnp.asarray(decoding), self.glass_slots.arena,
             jnp.asarray(ftoks), jnp.asarray(fmask),
-            jnp.zeros((B,), jnp.int32), self._rng, (),
+            jnp.zeros((B,), jnp.int32),
+            jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32),
+            jnp.ones((B,), jnp.float32), jnp.zeros((B,), jnp.int32),
+            jnp.ones((B,), bool), jnp.full((B, MAX_STOP_IDS), -1, jnp.int32),
+            (), False,
         )
         self.pool.cache = arena
 
@@ -1391,6 +1893,7 @@ class PagedEngine(_QueueEngineBase):
         self.spec_rollbacks += 1
         del e.outputs[ck.out_len :]
         e.pending = ck.pending
+        e.rng_pos = len(e.outputs)  # counter rewinds with the outputs
         e.spec_len = 0
         e.spec_ckpt = None
         self.lc.to(e, ReqState.RUNNING)
@@ -1409,46 +1912,44 @@ class PagedEngine(_QueueEngineBase):
             rolled_back_rows=self.spec_rolled_back_rows,
         )
 
-    def _decode_tick(self, finished: List[FinishedRequest], prefill_pending: bool) -> bool:
-        run = self.lc.in_state(ReqState.RUNNING)
-        if not run:
-            return False
-        k = self._spec_possible(run)
-        if k:
-            k = self._spec_capacity(run, k)
-        if k:
-            self._spec_draft(run, k)
-            self._spec_verify(run, k, finished)
-            # occupancy telemetry: a speculative round runs 2k+1 scan steps
-            # (k draft + k+1 verify) per participating slot; memory
-            # integrates post-rollback holdings for this tick
-            self.slot_steps += (2 * k + 1) * len(run)
-            self.kv_row_ticks += self.pool.blocks_in_use * self.pool.block_size
-            self.t += 1
-            return True
-        H = self._horizon(prefill_pending)
-        if self.pool.has_paged and self.alloc_mode == "incremental":
-            # shrink the fused chunk before shrinking the working set: a
-            # smaller H needs fewer boundary crossings than a preemption
-            while H > 1 and self._growth_need(run, H) > self.pool.n_free_blocks:
-                H //= 2
-            while self._growth_need(run, H) > self.pool.n_free_blocks:
-                if not self._preempt_for_capacity():
-                    break
-                run = self.lc.in_state(ReqState.RUNNING)
-                if not run:
-                    return False
-            for e in run:
-                ok = self.pool.ensure_capacity(e.slot, int(self.pool.lengths[e.slot]) + H)
-                assert ok, "growth fit was just established"
+    def _fit_growth(self, run: List[LiveRequest], H: int
+                    ) -> Tuple[List[LiveRequest], int]:
+        """Allocate-on-boundary growth for one fused chunk: shrink H before
+        shrinking the working set (a smaller H needs fewer boundary
+        crossings than a preemption), then preempt victims until the
+        remaining ``run`` fits.  Returns the surviving run and H."""
+        if not (self.pool.has_paged and self.alloc_mode == "incremental"):
+            return run, H
+        while H > 1 and self._growth_need(run, H) > self.pool.n_free_blocks:
+            H //= 2
+        while self._growth_need(run, H) > self.pool.n_free_blocks:
+            if not self._preempt_for_capacity():
+                break
+            run = [e for e in run if e.state is ReqState.RUNNING]
+            if not run:
+                return [], H
+        for e in run:
+            ok = self.pool.ensure_capacity(e.slot, int(self.pool.lengths[e.slot]) + H)
+            assert ok, "growth fit was just established"
+        return run, H
+
+    def _plain_decode(self, run: List[LiveRequest], H: int,
+                      finished: List[RequestOutput]) -> None:
+        """One fused H-step decode scan over ``run`` (growth already
+        ensured): per-slot sampling policy, forced replay re-feeds, and
+        in-scan stop detection — a slot whose emitted token hits its stop
+        set is truncated at the hit and finished (blocks freed) this tick."""
         B = self.pool.max_slots
         decoding, lengths, toks, btab = self._scan_inputs(run, H)
+        pos0, seeds, temp, topk, gmask, stop_ids, sampled = self._policy_inputs(
+            run, with_stops=True
+        )
         ftoks = np.zeros((H, B), np.int32)
         fmask = np.zeros((H, B), bool)
         for e in run:
             s = e.slot
             f = min(H, e.replay_left)
-            if f:  # forced re-feeds: outputs[k - replay_left : ...]
+            if f:  # forced re-feeds: outputs[n - replay_left : ...]
                 start = len(e.outputs) - e.replay_left
                 for j in range(f):
                     ftoks[j, s] = e.outputs[start + j]
@@ -1457,41 +1958,94 @@ class PagedEngine(_QueueEngineBase):
         if perm is None:
             perm = np.zeros((B,), np.int32)  # unused when groups == ()
         extra = self.glass_slots.arena if self.glass_slots is not None else None
-        seq, _, arena, self._rng = self._decode(
+        seq, _, hits, arena = self._decode(
             self.params, self.pool.cache, jnp.asarray(lengths), jnp.asarray(toks),
             jnp.asarray(btab), jnp.asarray(decoding), extra,
             jnp.asarray(ftoks), jnp.asarray(fmask), jnp.asarray(perm),
-            self._rng, groups,
+            jnp.asarray(pos0), jnp.asarray(seeds), jnp.asarray(temp),
+            jnp.asarray(topk), jnp.asarray(gmask), jnp.asarray(stop_ids),
+            groups, sampled,
         )
         self.pool.cache = arena
         seq = np.asarray(seq)  # (H, B)
+        hits = np.asarray(hits)  # (H, B) in-scan stop detections
         self.slot_steps += H * len(run)
         # telemetry: grouped rows are live by construction (_ffn_grouping
         # keys only RUNNING slots); memory integrates POST-growth holdings —
         # blocks allocated for this chunk's boundary crossings count for
         # every tick they are held
         self.grouped_rows += H * sum(groups)
-        self.kv_row_ticks += H * self.pool.blocks_in_use * self.pool.block_size
         for e in run:
             s = e.slot
             self.pool.lengths[s] += H
             f = min(H, e.replay_left)
             e.replay_left -= f
-            e.outputs.extend(int(x) for x in seq[f:, s])
+            new = [int(x) for x in seq[f:, s]]
+            hit_steps = np.nonzero(hits[f:, s])[0]
+            if hit_steps.size:
+                new = new[: int(hit_steps[0]) + 1]
+            e.outputs.extend(new)
             e.pending = int(seq[-1, s])
-            if len(e.outputs) >= e.req.max_new:
-                self._finish(s, finished)
+            e.rng_pos = len(e.outputs)
+            if hit_steps.size:
+                self._finish(s, finished, self._stop_reason(e, e.outputs[-1]))
+            elif len(e.outputs) >= e.req.max_new:
+                self._finish(s, finished, "length")
+
+    def _decode_tick(self, finished: List[RequestOutput], prefill_pending: bool) -> bool:
+        run = self.lc.in_state(ReqState.RUNNING)
+        if not run:
+            return False
+        spec_run, k = self._spec_round(run)
+        if k:
+            k = self._spec_capacity(spec_run, k)
+        if k:
+            self._spec_draft(spec_run, k)
+            self._spec_verify(spec_run, k, finished)
+            # occupancy telemetry: a speculative round runs 2k+1 scan steps
+            # (k draft + k+1 verify) per participating slot; memory
+            # integrates post-rollback holdings for this tick
+            self.slot_steps += (2 * k + 1) * len(spec_run)
+            self.kv_row_ticks += self.pool.blocks_in_use * self.pool.block_size
+            # spec_k=0 requests (and replays, and requests one token from
+            # finishing) interleave in the SAME tick: a plain H=1 decode
+            # over the non-participants
+            spec_ids = {id(e) for e in spec_run}
+            others = [
+                e for e in self.lc.in_state(ReqState.RUNNING)
+                if id(e) not in spec_ids
+            ]
+            if others:
+                others, _ = self._fit_growth(others, 1)
+                if others:
+                    self._plain_decode(others, 1, finished)
+            self.t += 1
+            return True
+        H = self._horizon(prefill_pending)
+        run, H = self._fit_growth(run, H)
+        if not run:
+            return False
+        # memory telemetry: POST-growth holdings — blocks allocated for this
+        # chunk's boundary crossings count for every tick they are held
+        self.kv_row_ticks += H * self.pool.blocks_in_use * self.pool.block_size
+        self._plain_decode(run, H, finished)
         self.t += H
         return True
 
-    def step(self) -> List[FinishedRequest]:
+    def step(self) -> List[RequestOutput]:
         """One engine tick: a thin driver over the lifecycle — swap-ins
         first (they have first claim on freed capacity), then admissions
         (policy order, best-effort under the watermark-aware filter), at
         most one bounded prefill chunk, then the largest provably safe
-        fused decode chunk, preempting victims if growth outruns the
-        pool."""
-        finished: List[FinishedRequest] = []
+        fused decode chunk (speculative round + plain decode for the
+        non-participants), preempting victims if growth outruns the pool.
+
+        Returns the tick's :class:`RequestOutput` stream: one
+        ``finished=True`` entry per request that completed (``length |
+        stop | eos``; :meth:`abort` returns its own), plus one live delta
+        (``new_tokens``) per request that accepted tokens this tick —
+        consume them as they arrive for streaming generation."""
+        finished: List[RequestOutput] = []
         t0 = self.t
         self._swap_in_tick()
         self._admit_tick()
@@ -1511,4 +2065,13 @@ class PagedEngine(_QueueEngineBase):
                 na = self.scheduler.next_arrival()
                 self.t = max(self.t + 1, na if na is not None else self.t + 1)
             self.kv_row_ticks += (self.t - t0) * rows_now
+        # streaming deltas for everything still live that grew this tick
+        # (accepted tokens only: SPECULATING never persists across a tick,
+        # so provisional drafts are never reported)
+        for e in self.lc.in_state(
+            ReqState.PREFILLING, ReqState.RUNNING,
+            ReqState.PREEMPTED_SWAPPED, ReqState.PREEMPTED_RECOMPUTE,
+        ):
+            if len(e.outputs) > e.emitted:
+                finished.append(self._output(e, finished=False))
         return finished

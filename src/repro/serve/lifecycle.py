@@ -22,6 +22,16 @@ RUNNING — the engine rolls the speculation back to the last accepted token
 speculative blocks, slice provisional outputs) before any preemption or
 finish, so swap/recompute resume paths never see speculated state.
 
+A request can now also reach FINISHED *early*: per-slot EOS/stop-token
+detection in the decode scan (``finish_reason`` "eos"/"stop") or an
+explicit ``engine.abort`` ("aborted") — from PREFILLING, RUNNING,
+PREEMPTED_SWAPPED (the host swap store is dropped) or PREEMPTED_RECOMPUTE
+(the queued replay is cancelled).  The same rule as preemption applies to
+a SPECULATING request: it must roll back its pending drafts (releasing
+speculative blocks and provisional tokens) and pass through RUNNING first
+— the FINISHED-via-stop transition enforces the early-finish leak class
+away.
+
 All resource transitions (slot binding, block allocation, swap stores,
 GLASS per-slot rows) happen *at* a state transition, never ad hoc: the
 engine tick asks the lifecycle for this tick's swap-in / admission /
@@ -45,9 +55,11 @@ Preemption comes in two flavors, chosen per victim by a cost model
   path as forced tokens (bit-identical KV, no new sampling).  Cost ∝
   tokens to replay.
 
-Resumed streams are token-identical to preemption-free serving under
-greedy decoding (the tested guarantee); with a temperature the replay
-shifts the engine-global RNG stream, so sampled continuations differ.
+Resumed streams are token-identical to preemption-free serving for greedy
+AND seeded-sampled requests (the tested guarantee): per-request sampling
+is counter-based — every draw is a pure function of (request seed,
+generated position, logits) — so a replayed position regenerates the same
+token and there is no engine-global RNG stream for preemption to shift.
 """
 from __future__ import annotations
 
@@ -69,13 +81,17 @@ class ReqState(str, Enum):
 
 
 _LEGAL = {
-    ReqState.WAITING: {ReqState.PREFILLING},
+    ReqState.WAITING: {
+        ReqState.PREFILLING,
+        ReqState.FINISHED,  # abort before first admission
+    },
     ReqState.PREFILLING: {
         ReqState.RUNNING,  # even max_new == 1 passes through RUNNING to finish
         ReqState.PREEMPTED_RECOMPUTE,  # partial prefill is cheaper to redo than to swap
+        ReqState.FINISHED,  # abort mid-prefill (slot + blocks released first)
     },
     ReqState.RUNNING: {
-        ReqState.FINISHED,
+        ReqState.FINISHED,  # length / eos / stop / abort
         ReqState.SPECULATING,
         ReqState.PREEMPTED_SWAPPED,
         ReqState.PREEMPTED_RECOMPUTE,
@@ -83,12 +99,21 @@ _LEGAL = {
     # SPECULATING is a sub-phase of RUNNING: the slot carries unverified
     # draft rows / provisional outputs.  The ONLY legal exit is back to
     # RUNNING (after commit or a full speculation rollback) — preempting,
-    # finishing, or swapping a mid-speculation request directly would leak
-    # speculated KV rows, blocks, and provisional tokens into the resume
-    # path, so the engine must roll the speculation back first.
+    # finishing (including EOS/stop/abort), or swapping a mid-speculation
+    # request directly would leak speculated KV rows, blocks, and
+    # provisional tokens into the resume path, so the engine must roll the
+    # speculation back first.  This is the early-finish leak-class guard:
+    # a stop-finishing SPECULATING request takes SPECULATING -> RUNNING ->
+    # FINISHED, with the rollback releasing its pending drafts in between.
     ReqState.SPECULATING: {ReqState.RUNNING},
-    ReqState.PREEMPTED_SWAPPED: {ReqState.RUNNING},
-    ReqState.PREEMPTED_RECOMPUTE: {ReqState.PREFILLING},
+    ReqState.PREEMPTED_SWAPPED: {
+        ReqState.RUNNING,
+        ReqState.FINISHED,  # abort: the host-side swap store is dropped
+    },
+    ReqState.PREEMPTED_RECOMPUTE: {
+        ReqState.PREFILLING,
+        ReqState.FINISHED,  # abort: the queued replay is cancelled
+    },
     ReqState.FINISHED: set(),
 }
 
@@ -111,11 +136,15 @@ class SpecCheckpoint:
     state_rows: Any = None
 
 
-@dataclass
+@dataclass(eq=False)
 class LiveRequest:
     """One request's lifecycle entry: scheduling state + everything needed
     to resume it after preemption (host-side; device state lives in the
-    pool / GLASS arenas and is re-bound at each transition)."""
+    pool / GLASS arenas and is re-bound at each transition).
+
+    ``eq=False``: entries are identity objects (the engine keeps them in
+    lists and sets); the default dataclass ``__eq__`` would compare ndarray
+    prompts and raise."""
 
     req: Request
     state: ReqState = ReqState.WAITING
@@ -137,6 +166,19 @@ class LiveRequest:
     # the rollback checkpoint while SPECULATING
     spec_len: int = 0
     spec_ckpt: Optional[SpecCheckpoint] = None
+    # per-request generation policy, resolved against the engine defaults at
+    # submit (sp: SamplingParams; gp: GlassParams with every field concrete)
+    sp: Any = None
+    gp: Any = None
+    finish_reason: Optional[str] = None  # length | stop | eos | aborted
+    emitted: int = 0  # accepted tokens already reported through step()
+    # counter-based PRNG position: the next sampled token's counter.  The
+    # engine maintains the invariant rng_pos == len(outputs) whenever the
+    # entry is not mid-speculation — provisional draft tokens do NOT
+    # advance it until the target tier accepts them, and rollback rewinds
+    # it with outputs (the state-churn determinism tests assert this
+    # counter against an undisturbed engine's).
+    rng_pos: int = 0
 
     @property
     def uid(self) -> int:

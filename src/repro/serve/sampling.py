@@ -6,15 +6,127 @@ The bigram tracker is a dense (B, V, V) boolean table — exact and fast for
 the vocabularies used in-repo; swap for a hashed ring buffer at 100k+ vocab
 (the table is only used offline during prior computation, never at serve
 time).
+
+Serving additions (per-request generation API):
+
+``SamplingParams`` is the request-scoped sampling policy the paged engine
+threads into its jitted decode scans, and ``sample_positional`` is the
+**counter-based PRNG** draw behind it: every sampled token is a pure
+function of ``(request seed, generated position, logits)`` — no engine-
+global RNG stream is ever consumed.  That makes sampled streams
+reproducible *by construction*: swap/recompute resume, forced-token
+replay, and speculative draft/verify all regenerate bit-identical tokens
+because position ``p`` always folds the same key.  Greedy decoding is the
+``seed=None`` special case.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 NEG = -1e30
+
+# per-request stop-set capacity in the jitted decode scan: eos_token_id plus
+# up to MAX_STOP_IDS - 1 extra stop ids ride in one fixed (B, MAX_STOP_IDS)
+# int32 input (padded with -1) so early-finish detection adds no jit variants
+MAX_STOP_IDS = 4
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Request-scoped sampling policy (the vLLM-style per-request knob).
+
+    ``seed=None`` (or ``greedy=True``, or ``temperature <= 0``) selects
+    greedy argmax decoding.  A seeded request samples with a counter-based
+    PRNG keyed on ``(seed, generated position)`` — see
+    :func:`sample_positional` — so its stream survives preemption, replay,
+    and speculative rollback bit-identically.
+
+    ``eos_token_id`` / ``stop_token_ids`` finish the request early
+    (``finish_reason`` "eos" / "stop"); the matched token is included in
+    the output.  At most :data:`MAX_STOP_IDS` ids total (eos counts).
+    """
+
+    temperature: float = 1.0
+    top_k: int = 0  # 0 = no top-k filtering
+    seed: Optional[int] = None  # None = greedy (the special case)
+    greedy: bool = False  # force greedy even with a seed set
+    eos_token_id: Optional[int] = None
+    stop_token_ids: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        object.__setattr__(self, "stop_token_ids", tuple(self.stop_token_ids))
+        if len(self.stop_set) > MAX_STOP_IDS:
+            raise ValueError(
+                f"at most {MAX_STOP_IDS} stop ids (eos included), got {self.stop_set}"
+            )
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.greedy or self.seed is None or self.temperature <= 0.0
+
+    @property
+    def stop_set(self) -> Tuple[int, ...]:
+        """All token ids that finish the request early (eos first)."""
+        eos = () if self.eos_token_id is None else (self.eos_token_id,)
+        return eos + tuple(t for t in self.stop_token_ids if t != self.eos_token_id)
+
+    @classmethod
+    def make_greedy(cls, *, eos_token_id: Optional[int] = None,
+                    stop_token_ids: Tuple[int, ...] = ()) -> "SamplingParams":
+        return cls(temperature=0.0, greedy=True, eos_token_id=eos_token_id,
+                   stop_token_ids=stop_token_ids)
+
+
+def positional_key(seed: jax.Array, pos: jax.Array) -> jax.Array:
+    """The counter-based PRNG key for one (request, position) draw.
+
+    ``fold_in(fold_in(key(0), seed), pos)`` — a pure function of the two
+    integers, so replay at the same position regenerates the same key no
+    matter what the engine did in between (the reproducibility contract
+    every resume path relies on)."""
+    base = jax.random.key(0)
+    return jax.random.fold_in(jax.random.fold_in(base, seed), pos)
+
+
+def top_k_filter_dynamic(logits: jax.Array, k: jax.Array) -> jax.Array:
+    """Per-row top-k filter with a *traced* k (B,): keep each row's k
+    largest logits (k = 0 or >= V keeps everything).  The static-k
+    :func:`top_k_filter` stays for the offline NPS path."""
+    V = logits.shape[-1]
+    srt = jnp.sort(logits, axis=-1)[..., ::-1]  # descending per row
+    kk = jnp.clip(k, 0, V)
+    th = jnp.take_along_axis(srt, jnp.maximum(kk - 1, 0)[..., None], axis=-1)
+    keep = (kk[..., None] <= 0) | (logits >= th)
+    return jnp.where(keep, logits, NEG)
+
+
+def sample_positional(
+    logits: jax.Array,  # (B, V) f32
+    seeds: jax.Array,  # (B,) int32/uint32 per-request seeds
+    pos: jax.Array,  # (B,) int32 generated position of THIS draw
+    temperature: jax.Array,  # (B,) f32
+    top_k: jax.Array,  # (B,) int32 (0 = off)
+) -> jax.Array:
+    """Counter-based per-slot sampling: row ``b`` draws from
+    ``logits[b]`` with key ``positional_key(seeds[b], pos[b])`` after
+    per-row temperature scaling and dynamic top-k filtering.
+
+    Deterministic per (seed, position, logits) — the engine's sampled
+    streams are replayable because this function has no other inputs.
+    Returns (B,) int32 token ids."""
+    logits = logits.astype(jnp.float32)
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    filt = top_k_filter_dynamic(scaled, top_k)
+    keys = jax.vmap(positional_key)(seeds, pos)
+    return jax.vmap(jax.random.categorical)(keys, filt).astype(jnp.int32)
 
 
 def top_k_filter(logits: jax.Array, k: int) -> jax.Array:

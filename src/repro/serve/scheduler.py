@@ -33,6 +33,9 @@ from typing import Callable, Deque, List, Optional
 
 import numpy as np
 
+from ..core.glass import GlassParams
+from .sampling import SamplingParams
+
 
 class AdmissionPolicy(str, Enum):
     FIFO = "fifo"
@@ -48,6 +51,11 @@ class Request:
     arrival: int = 0  # engine step at which the request becomes visible
     priority: int = 0  # larger = more urgent (PRIORITY policy only)
     deadline: Optional[int] = None  # absolute engine step (DEADLINE policy only)
+    # per-request generation policy (None = engine defaults; a bare Request
+    # through the legacy submit()/run() path decodes greedy at the engine's
+    # GLASS config — see PagedEngine.add_request for the first-class API)
+    sampling: Optional[SamplingParams] = None
+    glass: Optional[GlassParams] = None
 
 
 @dataclass
@@ -58,6 +66,28 @@ class FinishedRequest:
     arrival: int
     admitted_step: int
     finished_step: int
+
+
+@dataclass
+class RequestOutput:
+    """One request's streaming update from ``PagedEngine.step()``.
+
+    Every live request that produced tokens this tick yields one of these
+    (``new_tokens`` is the delta since the previous step); the final update
+    has ``finished=True`` with a ``finish_reason`` and carries the full
+    cumulative stream — structurally a superset of the legacy
+    :class:`FinishedRequest`, so ``run()`` can return it unchanged.
+    """
+
+    uid: int
+    prompt: np.ndarray
+    new_tokens: np.ndarray  # (delta,) ids emitted since the previous step()
+    tokens: np.ndarray  # (n,) cumulative generated ids
+    finished: bool
+    finish_reason: Optional[str]  # length | stop | eos | aborted (None while live)
+    arrival: int
+    admitted_step: int
+    finished_step: int  # -1 until finished
 
 
 @dataclass
@@ -101,6 +131,17 @@ class Scheduler:
         assert hasattr(req, "_submit_seq"), "requeue() is for previously submitted requests"
         assert all(q is not req for q in self.queue), "request is already queued"
         self.queue.append(req)
+
+    def remove(self, uid: int) -> Optional[Request]:
+        """Drop a queued request by uid (abort support).  Index-based
+        removal for the same reason as ``pop_admissible``: the dataclass
+        ``__eq__`` compares ndarray prompts and cannot be used on the
+        queue.  Returns the removed request, or None if not queued."""
+        for i, r in enumerate(self.queue):
+            if r.uid == uid:
+                del self.queue[i]
+                return r
+        return None
 
     def __len__(self) -> int:
         return len(self.queue)

@@ -24,6 +24,12 @@ def pytest_configure(config):
         "+ state-invariant rollback checks); CI runs it as its own lane under "
         "SPEC_GLASS_MODE=fused and SPEC_GLASS_MODE=block_sparse",
     )
+    config.addinivalue_line(
+        "markers",
+        "sampling: per-request generation API suite (SamplingParams counter-"
+        "based PRNG, GlassParams densities, streaming RequestOutput, abort, "
+        "EOS early finish); CI runs it as its own lane",
+    )
 
 
 @pytest.fixture(scope="session")

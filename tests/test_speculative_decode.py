@@ -562,6 +562,124 @@ def test_spec_rollback_pool_property(ops):
         pool.shrink_to(1 - slot, 0)
 
 
+# -- sampled speculation: positional verdicts under SamplingParams ------------
+
+
+def _sampled_sp(seed=4242):
+    from repro.serve.sampling import SamplingParams
+
+    return SamplingParams(temperature=0.9, top_k=40, seed=seed)
+
+
+@pytest.mark.sampling
+def test_sampled_spec_token_parity():
+    """Satellite: under per-request sampling, the target verdict is the
+    counter-based positional sample from the pre-override logits — so a
+    speculating engine's sampled streams are token-identical to a
+    non-speculative engine's (speculation invisible under sampling, the
+    same contract as greedy)."""
+    model, params, prior, glass, spec = _engines("dense", spec_k=2,
+                                                 draft_ratio=0.5)
+    _, _, _, _, base = _engines("dense", spec_k=0, draft_ratio=0.5)
+    rng = np.random.RandomState(11)
+    prompts = [rng.randint(3, 101, size=6).astype(np.int32) for _ in range(3)]
+
+    def serve(eng, spec_on):
+        from repro.core import GlassParams
+
+        outs = {}
+        for i, p in enumerate(prompts):
+            eng.add_request(p.copy(), 10, uid=i, sampling=_sampled_sp(100 + i),
+                            glass=GlassParams(spec_k=2 if spec_on else 0))
+        guard = 0
+        while eng._work_remaining():
+            guard += 1
+            assert guard < 600
+            for o in eng.step():
+                if o.finished:
+                    outs[o.uid] = o
+        return outs
+
+    got = serve(spec, True)
+    assert spec.spec_ticks > 0, "the speculative path never ran"
+    assert spec.spec_accepted > 0, "sampled drafts never matched the verdict"
+    want = serve(base, False)
+    for i in range(3):
+        np.testing.assert_array_equal(want[i].tokens, got[i].tokens,
+                                      err_msg=f"uid={i}")
+    _assert_allocator_balanced(spec.pool)
+    assert spec.pool.allocator.n_live == 0
+
+
+@pytest.mark.sampling
+def test_sampled_spec_state_invariants():
+    """Seeded sampled stream + forced rollback rounds: the pool must be
+    bit-identical to a never-speculated engine serving the same sampled
+    request — KV rows, residue, holdings, free stack, AND the per-slot
+    RNG counter (provisional drafts never advance it; rollback rewinds
+    it with the outputs)."""
+    model, params, prior, glass, spec = _engines("dense", spec_k=3,
+                                                 draft_ratio=0.2, max_len=64)
+    _, _, _, _, base = _engines("dense", spec_k=0, draft_ratio=0.2,
+                                max_len=64, decode_chunk=1)
+    prompt = np.random.RandomState(21).randint(3, 101, size=6).astype(np.int32)
+    uid = spec.add_request(prompt.copy(), 48, sampling=_sampled_sp())
+    for _ in range(8):
+        spec.step()
+        if uid not in spec.lc.entries:
+            break
+    e = spec.lc.entries.get(uid)
+    assert e is not None and e.state is ReqState.RUNNING
+    assert e.rng_pos == len(e.outputs)
+    _force_rollback_round(spec, e)
+    assert spec.spec_rollbacks > 0
+    assert e.rng_pos == len(e.outputs)  # rollback rewound the counter too
+    g, n = len(e.outputs), int(spec.pool.lengths[e.slot])
+    base.add_request(prompt.copy(), 48, sampling=_sampled_sp(), uid=uid)
+    for _ in range(400):
+        eb = base.lc.entries.get(uid)
+        if eb is not None and eb.state is ReqState.RUNNING and len(eb.outputs) >= g:
+            break
+        base.step()
+    eb = base.lc.entries[uid]
+    assert len(eb.outputs) == g
+    assert eb.outputs == e.outputs  # sampled tokens, not argmax luck
+    assert eb.rng_pos == e.rng_pos == g
+    assert int(base.pool.lengths[eb.slot]) == n
+    for a, b in zip(_gathered_rows(spec.pool, e.slot, n),
+                    _gathered_rows(base.pool, eb.slot, n)):
+        np.testing.assert_array_equal(a, b)
+    assert _residue_is_zero(spec.pool, e.slot, n)
+    if spec.pool.has_paged:
+        assert spec.pool.held_blocks(e.slot) == spec.pool.blocks_needed(n)
+        _assert_allocator_balanced(spec.pool)
+        assert spec.pool.allocator._free == base.pool.allocator._free
+
+
+@pytest.mark.sampling
+def test_sampled_midspec_preemption_slices_and_resumes():
+    """Mid-speculation preemption of a SAMPLED request: provisional draft
+    tokens are sliced off, and the resumed stream still matches the
+    undisturbed non-speculative engine (counter-based draws survive the
+    recompute replay)."""
+    model, params, prior, glass, eng = _engines("dense", spec_k=3,
+                                                draft_ratio=0.2, max_len=64)
+    prompt = np.random.RandomState(31).randint(3, 101, size=6).astype(np.int32)
+    uid = eng.add_request(prompt.copy(), 12, sampling=_sampled_sp(9))
+    e, k = _enter_speculation(eng, uid)
+    out_before = list(e.outputs[:-k])
+    eng._preempt(e, "recompute")
+    assert e.outputs == out_before
+    assert e.rng_pos == len(e.outputs)
+    done = eng.run()
+    _, _, _, _, base = _engines("dense", spec_k=0, draft_ratio=0.2, max_len=64)
+    base.add_request(prompt.copy(), 12, sampling=_sampled_sp(9), uid=uid)
+    want = base.run()
+    np.testing.assert_array_equal(want[uid].tokens, done[uid].tokens)
+    assert eng.pool.allocator.n_live == 0
+    assert eng.spec_rollbacks > 0
+
+
 # -- engine-driven stress: speculation + pressure preemption ------------------
 
 
