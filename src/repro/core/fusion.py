@@ -78,6 +78,23 @@ def glass_scores(local: jax.Array, global_: jax.Array, lam: float) -> jax.Array:
     return (1.0 - lam) * rl + lam * rg
 
 
+def merge_stat_sums(a, b):
+    """Additive merge of two running GLASS stat-sum pytrees (the chunked
+    prefill invariant: per-token contributions are independent, so chunk
+    stats combine by plain addition — ``{"sum_abs", "count"}`` leaves both).
+
+    The fused mask depends only on the left-fold of this merge over the
+    prompt's chunks, which is what makes a cached prefix resumable: a
+    snapshot of the fold at a chunk boundary plus the remaining chunks
+    reproduces the uncached fold bit-for-bit (same additions, same order).
+    ``None`` is the empty element (no chunks yet)."""
+    if a is None:
+        return b
+    if b is None:
+        return a
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
 def select_topk(scores: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
     """Top-k with stable index tie-breaking.  scores (..., m).
 

@@ -71,6 +71,30 @@ class GlassParams:
         )
 
 
+def snapshot_stat_sums(stats):
+    """Detachable snapshot of a running GLASS stat-sum pytree, safe to
+    retain across requests (e.g. in the serving prefix cache).
+
+    Chunk stats are produced functionally (every merge allocates fresh
+    buffers and the prefill jits never donate them), so the snapshot is a
+    structural copy with the same immutable leaves — cheap, and bit-exact
+    by construction.  ``None`` (no chunks yet) snapshots to ``None``."""
+    if stats is None:
+        return None
+    return jax.tree.map(jnp.asarray, stats)
+
+
+def restore_stat_sums(snap):
+    """Resume accumulation from a :func:`snapshot_stat_sums` snapshot: the
+    returned pytree is a valid left operand for
+    :func:`~repro.core.fusion.merge_stat_sums`, so
+    ``merge(restore(snap), next_chunk_stats)`` continues the fold exactly
+    where the snapshotted prefill stopped."""
+    if snap is None:
+        return None
+    return jax.tree.map(jnp.asarray, snap)
+
+
 @dataclass(frozen=True)
 class MaskSet:
     # CAUTION: ``idx`` semantics follow the selection mode.  ``neuron`` /

@@ -164,20 +164,24 @@ def make_decode_step_sampled(model: Model):
     the jittable program behind the per-request ``SamplingParams`` API.
 
     Returns ``decode(params, cache, token, cache_len, seeds, pos,
-    temperature, top_k, greedy_mask) -> (next_token (B, 1), cache)``:
-    row ``b`` draws token ``pos[b]`` of request ``seeds[b]``'s stream
-    (``sample_positional`` keys on exactly that pair, so replaying a
-    position regenerates the same token), or the argmax where
-    ``greedy_mask`` is set.  All sampling inputs are traced (B,) vectors —
-    one compiled program serves any mix of greedy and sampled requests."""
+    temperature, top_k, greedy_mask[, top_p, min_p]) ->
+    (next_token (B, 1), cache)``: row ``b`` draws token ``pos[b]`` of
+    request ``seeds[b]``'s stream (``sample_positional`` keys on exactly
+    that pair, so replaying a position regenerates the same token), or the
+    argmax where ``greedy_mask`` is set.  All sampling inputs are traced
+    (B,) vectors — one compiled program serves any mix of greedy and
+    sampled requests.  ``top_p`` / ``min_p`` are optional trailing (B,)
+    vectors (nucleus and min-p filtering; omitted = disabled) so existing
+    9-argument callers lower the identical program as before."""
     from ..serve.sampling import sample_positional
 
     def decode(params, cache, token, cache_len, seeds, pos, temperature,
-               top_k, greedy_mask):
+               top_k, greedy_mask, top_p=None, min_p=None):
         logits, cache = model.decode_step(params, token, cache, cache_len)
         lg = logits[:, -1].astype(jnp.float32)
         g = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-        s = sample_positional(lg, seeds, pos, temperature, top_k)
+        s = sample_positional(lg, seeds, pos, temperature, top_k,
+                              top_p=top_p, min_p=min_p)
         nxt = jnp.where(greedy_mask, g, s).astype(jnp.int32)[:, None]
         return nxt, cache
 
@@ -285,3 +289,28 @@ def make_chunked_prefill(model: Model, chunk_tokens: int):
         )
 
     return prefill_chunk
+
+
+def make_resumed_prefill(model: Model, chunk_tokens: int):
+    """Prefix-cache warm prefill: one chunk that CONTINUES a cached
+    prefix's GLASS stat fold instead of starting a fresh one.
+
+    Returns ``prefill_resumed(params, tokens, cache, cache_len, block_table,
+    carry_stats) -> (logits, cache, merged_stats)`` where ``carry_stats``
+    is a restored prefix-cache snapshot (the left-fold over the cached
+    rows) and ``merged_stats = merge_stat_sums(carry, chunk)``.  Because
+    the merge is the same addition the engine applies between cold chunks,
+    lowering this program at the fork point reproduces the cold fold
+    bit-for-bit — the jittable witness of the prefix-cache resume
+    invariant, and what the dry-run lowers for warm-start serving."""
+    from ..core.fusion import merge_stat_sums
+
+    def prefill_resumed(params, tokens, cache, cache_len, block_table,
+                        carry_stats):
+        assert tokens.shape[1] <= chunk_tokens, (tokens.shape, chunk_tokens)
+        logits, cache, stats = model.prefill_chunk(
+            params, tokens, cache, cache_len, block_table=block_table
+        )
+        return logits, cache, merge_stat_sums(carry_stats, stats)
+
+    return prefill_resumed

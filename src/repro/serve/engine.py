@@ -47,13 +47,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.fusion import GlassConfig
+from ..core.fusion import GlassConfig, merge_stat_sums
 from ..core.glass import (
     GlassParams,
     build_masks,
     build_tiered_masks,
     compact_params,
     reselect_at_density,
+    restore_stat_sums,
+    snapshot_stat_sums,
 )
 from ..models.api import Model
 from .kv_pool import BlockPool, KVPool, clear_slot_leaf, pow2_bucket as _pow2_bucket
@@ -804,6 +806,7 @@ class PagedEngine(_QueueEngineBase):
         rng: Optional[jax.Array] = None,  # unused: sampling is counter-based
         decode_chunk: int = 8,  # max ticks fused into one jitted scan
         sampling: Optional[SamplingParams] = None,  # default SamplingParams
+        prefix_cache: bool = False,  # content-addressed KV prefix reuse
     ):
         if glass is not None:
             assert global_prior is not None, "GLASS needs the offline prior"
@@ -852,8 +855,12 @@ class PagedEngine(_QueueEngineBase):
         self.alloc_mode = alloc_mode
         self.preempt_cfg = preemption if preemption is not None else PreemptionConfig()
         watermark = self.preempt_cfg.watermark_blocks if alloc_mode == "incremental" else 0
+        # the cache namespace folds the model config (and the GLASS config,
+        # which shapes the stat snapshots) into every chain key: prefix
+        # chains are content-addressed by (token ids, model config)
         self.pool = BlockPool(model, max_slots, max_len, block_size, num_blocks,
-                              watermark=watermark)
+                              watermark=watermark, prefix_cache=prefix_cache,
+                              cache_namespace=repr((model.cfg, glass)))
         self.scheduler = Scheduler(max_len, policy=policy)
         self.glass = glass
         self.glass_slots = (
@@ -900,7 +907,8 @@ class PagedEngine(_QueueEngineBase):
         # is the only policy static: an all-greedy batch compiles without
         # any sampling ops, preserving the PR-4 greedy program exactly.
         def dec(pr, arena, lengths, toks, btab, dmask, extra, ftoks, fmask,
-                perm, pos0, seeds, temp, topk, gmask, stop_ids, groups, sampled):
+                perm, pos0, seeds, temp, topk, topp, minp, gmask, stop_ids,
+                groups, sampled):
             kw = {}
             if mode == "masked":
                 kw["ffn_masks"] = extra
@@ -940,7 +948,9 @@ class PagedEngine(_QueueEngineBase):
                 # requests alike.
                 greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
                 if sampled:
-                    samp = sample_positional(lg, seeds, pos, temp, topk)
+                    samp = sample_positional(
+                        lg, seeds, pos, temp, topk, top_p=topp, min_p=minp
+                    )
                     verdict = jnp.where(gmask, greedy, samp)
                 else:
                     verdict = greedy
@@ -962,7 +972,7 @@ class PagedEngine(_QueueEngineBase):
 
         # the arena is dead after each call — donate so the block pool (and
         # state rows) update in place instead of copying every tick
-        self._decode = jax.jit(dec, static_argnums=(16, 17), donate_argnums=(1,))
+        self._decode = jax.jit(dec, static_argnums=(18, 19), donate_argnums=(1,))
 
         axes, paged = self.pool.axes, self.pool.paged
 
@@ -1166,6 +1176,9 @@ class PagedEngine(_QueueEngineBase):
             e.slot = -1
             e.pstats = None
         elif e.state is ReqState.PREEMPTED_SWAPPED:
+            # a swapped request keeps ownership refs on shared prefix
+            # blocks it never copied to host — drop them or they leak
+            self.pool.release_swapped(e.swap)
             e.swap = None
             e.glass_rows = None
         elif e.state is ReqState.PREEMPTED_RECOMPUTE:
@@ -1242,6 +1255,8 @@ class PagedEngine(_QueueEngineBase):
             jnp.asarray([0], jnp.int32),
             jnp.asarray([sp.temperature], jnp.float32),
             jnp.asarray([sp.top_k], jnp.int32),
+            top_p=jnp.asarray([sp.top_p], jnp.float32),
+            min_p=jnp.asarray([sp.min_p], jnp.float32),
         )[0])
 
     def _glass_override(self, e: LiveRequest):
@@ -1280,6 +1295,8 @@ class PagedEngine(_QueueEngineBase):
         seeds = np.zeros((B,), np.int32)
         temp = np.ones((B,), np.float32)
         topk = np.zeros((B,), np.int32)
+        topp = np.ones((B,), np.float32)
+        minp = np.zeros((B,), np.float32)
         gmask = np.ones((B,), bool)
         stop_ids = np.full((B, MAX_STOP_IDS), -1, np.int32)
         sampled = False
@@ -1296,10 +1313,12 @@ class PagedEngine(_QueueEngineBase):
                 seeds[s] = np.int32(np.uint32(sp.seed))
                 temp[s] = sp.temperature
                 topk[s] = sp.top_k
+                topp[s] = sp.top_p
+                minp[s] = sp.min_p
             if with_stops:
                 for j, t in enumerate(sp.stop_set):
                     stop_ids[s, j] = t
-        return pos0, seeds, temp, topk, gmask, stop_ids, sampled
+        return pos0, seeds, temp, topk, topp, minp, gmask, stop_ids, sampled
 
     # -- lifecycle transitions ----------------------------------------------
 
@@ -1417,7 +1436,7 @@ class PagedEngine(_QueueEngineBase):
             if not self.pool.n_free_slots:
                 return
             reserve = self.pool.watermark if self.pool.active.any() else 0
-            if self.pool.has_paged and e.swap.n_blocks + reserve > self.pool.n_free_blocks:
+            if self.pool.has_paged and e.swap.n_blocks + reserve > self.pool.n_available_blocks:
                 return
             slot = self.pool.swap_in(e.swap)
             if slot is None:
@@ -1448,12 +1467,35 @@ class PagedEngine(_QueueEngineBase):
                 # take the engine defaults); the caller's Request object is
                 # never mutated
                 e.sp, e.gp = self._policies[r.uid]
-            slot = self.pool.admit(self._first_rows(r))
-            assert slot is not None  # _fits held and a slot was free
+            # admission consults the prefix cache: a hit binds the cached
+            # chain shared (CoW) and prefill resumes at the fork point from
+            # the entry's stat-sum / state-row snapshot.  fork alignment to
+            # chunk_tokens keeps resumed chunk boundaries identical to a
+            # cold prefill's, so the stat left-fold (and the fused mask it
+            # finalizes into) is bit-identical — recompute re-admissions
+            # included.
+            fork, entries = self.pool.lookup_prefix(r.prompt, self.chunk_tokens)
+            if fork:
+                rows = (
+                    self._rows_needed(r) if self.alloc_mode == "full"
+                    else fork + min(self.chunk_tokens, len(r.prompt) - fork)
+                )
+                slot = self.pool.admit_prefix(rows, entries)
+                assert slot is not None  # a hit needs <= the cold path's blocks
+                e.prefill_pos = fork
+                e.cached_rows = fork
+                self.pool.lengths[slot] = fork
+                tail = entries[-1]
+                e.pstats = restore_stat_sums(tail.pstats)
+                self.pool.restore_state_rows(slot, tail.state_rows)
+            else:
+                slot = self.pool.admit(self._first_rows(r))
+                assert slot is not None  # _fits held and a slot was free
+                e.prefill_pos = 0
+                e.cached_rows = 0
+                e.pstats = None
             self.lc.to(e, ReqState.PREFILLING)
             e.slot = slot
-            e.prefill_pos = 0
-            e.pstats = None
             e.admitted_step = self.t
             if e.first_admitted_step < 0:
                 e.first_admitted_step = self.t
@@ -1493,10 +1535,27 @@ class PagedEngine(_QueueEngineBase):
         self.pool.cache = arena
         self.pool.lengths[slot] = pos + T
         e.prefill_pos = pos + T
-        e.pstats = (
-            stats if e.pstats is None
-            else jax.tree.map(lambda a, b: a + b, e.pstats, stats)
-        )
+        # e.pstats is the FULL left-fold over [0, pos+T): on a cache hit the
+        # restored snapshot already covers [0, fork), so merging each chunk
+        # keeps the fold identical to a cold prefill's (same additions, same
+        # association — merge_stat_sums docstring)
+        e.pstats = merge_stat_sums(e.pstats, stats)
+        end = pos + T
+        # register the prefilled prefix: full blocks become cache entries
+        # immediately (concurrent arrivals may hit a still-prefilling
+        # request's prefix).  An entry is resumable only at a block+chunk
+        # aligned boundary — there the stat fold and recurrent state match
+        # what a cold prefill would hold at the same position.
+        if self.pool.prefix_cache is not None:
+            resumable = (
+                end % self.pool.block_size == 0 and end % self.chunk_tokens == 0
+            )
+            self.pool.register_prefix(
+                slot, r.prompt, end,
+                resumable=resumable,
+                pstats=snapshot_stat_sums(e.pstats) if resumable else None,
+                state_rows=self.pool.save_state_rows(slot) if resumable else None,
+            )
         self.max_prefill_tokens_per_tick = max(self.max_prefill_tokens_per_tick, T)
         if pos + T == len(r.prompt):  # final chunk: finalize GLASS + first token
             if self.glass_slots is not None:
@@ -1666,9 +1725,9 @@ class PagedEngine(_QueueEngineBase):
         when 1 row per slot still does not fit)."""
         if not (self.pool.has_paged and self.alloc_mode == "incremental"):
             return k  # full-need admission reserved the worst case
-        while k > 1 and self._growth_need(run, k + 1) > self.pool.n_free_blocks:
+        while k > 1 and self._growth_need(run, k + 1) > self.pool.n_available_blocks:
             k //= 2
-        if self._growth_need(run, k + 1) > self.pool.n_free_blocks:
+        if self._growth_need(run, k + 1) > self.pool.n_available_blocks:
             return 0
         for e in run:
             ok = self.pool.ensure_capacity(e.slot, int(self.pool.lengths[e.slot]) + k + 1)
@@ -1693,8 +1752,8 @@ class PagedEngine(_QueueEngineBase):
             )
             self.lc.to(e, ReqState.SPECULATING)
         decoding, lengths, toks, btab = self._scan_inputs(run, k + 1)
-        pos0, seeds, temp, topk, gmask, stop_ids, sampled = self._policy_inputs(
-            run, with_stops=False
+        pos0, seeds, temp, topk, topp, minp, gmask, stop_ids, sampled = (
+            self._policy_inputs(run, with_stops=False)
         )
         B = self.pool.max_slots
         # sampled slots draft with the SAME counter-based keys the target
@@ -1707,7 +1766,8 @@ class PagedEngine(_QueueEngineBase):
             jnp.zeros((k, B), jnp.int32), jnp.zeros((k, B), bool),
             jnp.zeros((B,), jnp.int32),
             jnp.asarray(pos0), jnp.asarray(seeds), jnp.asarray(temp),
-            jnp.asarray(topk), jnp.asarray(gmask), jnp.asarray(stop_ids),
+            jnp.asarray(topk), jnp.asarray(topp), jnp.asarray(minp),
+            jnp.asarray(gmask), jnp.asarray(stop_ids),
             (), sampled,
         )
         self.pool.cache = arena
@@ -1741,8 +1801,8 @@ class PagedEngine(_QueueEngineBase):
             for e in run:
                 self.pool.restore_state_rows(e.slot, e.spec_ckpt.state_rows)
         decoding, lengths, toks, btab = self._scan_inputs(run, k + 1)
-        pos0, seeds, temp, topk, gmask, stop_ids, sampled = self._policy_inputs(
-            run, with_stops=False, H_offset_ckpt=True
+        pos0, seeds, temp, topk, topp, minp, gmask, stop_ids, sampled = (
+            self._policy_inputs(run, with_stops=False, H_offset_ckpt=True)
         )
         B = self.pool.max_slots
         ftoks = np.zeros((k + 1, B), np.int32)
@@ -1761,7 +1821,8 @@ class PagedEngine(_QueueEngineBase):
             jnp.asarray(btab), jnp.asarray(decoding), self.glass_slots.arena,
             jnp.asarray(ftoks), jnp.asarray(fmask), jnp.asarray(perm),
             jnp.asarray(pos0), jnp.asarray(seeds), jnp.asarray(temp),
-            jnp.asarray(topk), jnp.asarray(gmask), jnp.asarray(stop_ids),
+            jnp.asarray(topk), jnp.asarray(topp), jnp.asarray(minp),
+            jnp.asarray(gmask), jnp.asarray(stop_ids),
             groups, sampled,
         )
         self.pool.cache = arena
@@ -1869,6 +1930,7 @@ class PagedEngine(_QueueEngineBase):
             jnp.zeros((B,), jnp.int32),
             jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32),
             jnp.ones((B,), jnp.float32), jnp.zeros((B,), jnp.int32),
+            jnp.ones((B,), jnp.float32), jnp.zeros((B,), jnp.float32),
             jnp.ones((B,), bool), jnp.full((B, MAX_STOP_IDS), -1, jnp.int32),
             (), False,
         )
@@ -1920,9 +1982,9 @@ class PagedEngine(_QueueEngineBase):
         remaining ``run`` fits.  Returns the surviving run and H."""
         if not (self.pool.has_paged and self.alloc_mode == "incremental"):
             return run, H
-        while H > 1 and self._growth_need(run, H) > self.pool.n_free_blocks:
+        while H > 1 and self._growth_need(run, H) > self.pool.n_available_blocks:
             H //= 2
-        while self._growth_need(run, H) > self.pool.n_free_blocks:
+        while self._growth_need(run, H) > self.pool.n_available_blocks:
             if not self._preempt_for_capacity():
                 break
             run = [e for e in run if e.state is ReqState.RUNNING]
@@ -1941,8 +2003,8 @@ class PagedEngine(_QueueEngineBase):
         set is truncated at the hit and finished (blocks freed) this tick."""
         B = self.pool.max_slots
         decoding, lengths, toks, btab = self._scan_inputs(run, H)
-        pos0, seeds, temp, topk, gmask, stop_ids, sampled = self._policy_inputs(
-            run, with_stops=True
+        pos0, seeds, temp, topk, topp, minp, gmask, stop_ids, sampled = (
+            self._policy_inputs(run, with_stops=True)
         )
         ftoks = np.zeros((H, B), np.int32)
         fmask = np.zeros((H, B), bool)
@@ -1963,7 +2025,8 @@ class PagedEngine(_QueueEngineBase):
             jnp.asarray(btab), jnp.asarray(decoding), extra,
             jnp.asarray(ftoks), jnp.asarray(fmask), jnp.asarray(perm),
             jnp.asarray(pos0), jnp.asarray(seeds), jnp.asarray(temp),
-            jnp.asarray(topk), jnp.asarray(gmask), jnp.asarray(stop_ids),
+            jnp.asarray(topk), jnp.asarray(topp), jnp.asarray(minp),
+            jnp.asarray(gmask), jnp.asarray(stop_ids),
             groups, sampled,
         )
         self.pool.cache = arena

@@ -33,8 +33,8 @@ decode step needs no per-row branching.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Dict, List, Optional
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -143,25 +143,43 @@ class SwappedRequest:
     """Host-side store of one preempted-by-swap request's device state.
 
     ``host`` mirrors the cache pytree: paged leaves hold the request's
-    gathered blocks (padded to a power of two with trash-block copies so
-    the gather/scatter jits compile O(log nb) variants), state leaves hold
-    the slot's row.  Swap-in writes it back bit-identical into freshly
-    allocated blocks / a freshly allocated slot.
+    gathered PRIVATE blocks (padded to a power of two with trash-block
+    copies so the gather/scatter jits compile O(log nb) variants), state
+    leaves hold the slot's row.  Swap-in writes it back bit-identical into
+    freshly allocated blocks / a freshly allocated slot.
+
+    ``kept`` lists the shared (prefix-cache-registered) blocks the request
+    did NOT copy out: it keeps its ownership reference on them across the
+    swap — they stay on device, immutable, pinned against eviction — and
+    swap-in splices the same physical ids back into the rebuilt table.
     """
 
     host: Any
-    n_blocks: int  # live blocks to re-allocate (excludes padding)
+    n_blocks: int  # private live blocks to re-allocate (excludes kept + padding)
     n_padded: int  # gather width actually stored
     length: int  # pool lengths[slot] at swap-out
     nbytes: int  # live bytes moved out (telemetry)
+    kept: List[Tuple[int, int]] = field(default_factory=list)  # (table idx, block id)
 
 
 class BlockAllocator:
-    """Free-list allocator over block ids ``1..num_blocks-1`` (0 = trash).
+    """Refcounted free-list allocator over block ids ``1..num_blocks-1``
+    (0 = trash).
 
-    Host-side and strict: double-frees and foreign ids raise instead of
-    silently corrupting the table (a stale free would hand one block to two
-    live requests — the exact cross-request KV leak the pool must prevent).
+    Host-side and strict: double-frees, foreign ids, and freeing a block
+    that still has owners raise instead of silently corrupting the table
+    (a stale free would hand one block to two live requests — the exact
+    cross-request KV leak the pool must prevent).
+
+    Ownership model (prefix caching): ``alloc`` hands out blocks with
+    refcount 1; ``incref`` adds an owner when a new request shares an
+    already-written prefix block (copy-on-write tables never write shared
+    blocks, so sharing is read-only by construction); ``decref`` drops an
+    owner and returns the ids that reached refcount 0 — those stay *live*
+    (allocated but unowned, e.g. retained by the prefix-cache index) until
+    :meth:`free` returns them to the free stack.  ``free`` only accepts
+    refcount-0 live ids, so a shared block can never be reclaimed out from
+    under a reader.
     """
 
     TRASH = 0
@@ -172,6 +190,7 @@ class BlockAllocator:
         self.num_blocks = num_blocks
         self._free: List[int] = list(range(1, num_blocks))[::-1]  # pop() -> block 1 first
         self._live: set = set()
+        self._ref: Dict[int, int] = {}  # live id -> owner count (0 = retained)
 
     @property
     def n_free(self) -> int:
@@ -181,22 +200,287 @@ class BlockAllocator:
     def n_live(self) -> int:
         return len(self._live)
 
+    def refcount(self, block: int) -> int:
+        """Owner count of a live id (0 for retained-but-unowned ids);
+        raises on free/foreign ids."""
+        if block not in self._live:
+            raise ValueError(f"refcount of non-live block id {block}")
+        return self._ref[block]
+
     def alloc(self, n: int) -> Optional[List[int]]:
-        """n blocks, or None (allocation is all-or-nothing)."""
+        """n blocks at refcount 1 each, or None (allocation is all-or-nothing)."""
         if n < 0:
             raise ValueError(f"alloc({n})")
         if n > len(self._free):
             return None
         out = [self._free.pop() for _ in range(n)]
         self._live.update(out)
+        for b in out:
+            self._ref[b] = 1
         return out
 
-    def free(self, blocks: List[int]) -> None:
+    def incref(self, blocks: List[int]) -> None:
+        """Add one owner per id (prefix sharing).  Ids must be live; a
+        retained refcount-0 id is resurrected to owned here."""
+        for b in blocks:
+            if b not in self._live:
+                raise ValueError(f"incref of non-live block id {b}")
+        for b in blocks:
+            self._ref[b] += 1
+
+    def decref(self, blocks: List[int]) -> List[int]:
+        """Drop one owner per id.  Returns (in input order) the ids whose
+        refcount reached 0 — they STAY live; the caller either retains
+        them (prefix-cache index) or hands them to :meth:`free`.  A decref
+        past zero is the double-free class and raises."""
+        zeroed: List[int] = []
         for b in blocks:
             if b not in self._live:
                 raise ValueError(f"double-free or foreign block id {b}")
+        # duplicate ids in ONE call are fine for decref (a request may
+        # legitimately hold several references) — but each occurrence must
+        # be backed by an owner
+        counts: Dict[int, int] = {}
+        for b in blocks:
+            counts[b] = counts.get(b, 0) + 1
+        for b, c in counts.items():
+            if self._ref[b] < c:
+                raise ValueError(
+                    f"decref of block id {b} x{c} with only {self._ref[b]} owners"
+                )
+        for b in blocks:
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                zeroed.append(b)
+        return zeroed
+
+    def free(self, blocks: List[int]) -> None:
+        """Return fully-released (refcount-0) live ids to the free stack.
+        Freeing an owned block raises — callers release ownership through
+        :meth:`decref` first (legacy exclusive-owner paths do both in one
+        pool-level release)."""
+        if len(set(blocks)) != len(blocks):
+            raise ValueError(f"duplicate block ids in free: {blocks}")
+        for b in blocks:
+            if b not in self._live:
+                raise ValueError(f"double-free or foreign block id {b}")
+            if self._ref[b] != 0:
+                raise ValueError(
+                    f"free of block id {b} with refcount {self._ref[b]} > 0"
+                )
+        for b in blocks:
             self._live.remove(b)
+            del self._ref[b]
             self._free.append(b)
+
+    def release(self, blocks: List[int]) -> List[int]:
+        """Drop one owner per id and return the fully-released ones to the
+        free stack in one step (the exclusive-owner fast path).  Returns
+        the freed ids; callers that retain refcount-0 blocks (the prefix
+        cache) use :meth:`decref` / :meth:`free` separately instead."""
+        zeroed = self.decref(blocks)
+        self.free(zeroed)
+        return zeroed
+
+
+# ---------------------------------------------------------------------------
+# Content-addressed prefix cache
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PrefixEntry:
+    """One cached full KV block in a (token-ids, model-config) prefix chain.
+
+    ``key`` is the chain hash up to and including this block's tokens
+    (``parent`` is the previous block's key, or the namespace root);
+    ``block`` is the physical block id whose rows hold these tokens' KV.
+    ``tokens`` is kept for exact verification — a hash collision must
+    degrade to a miss, never to serving another prompt's KV.
+
+    ``resumable`` entries end on a boundary that was both a block edge and
+    a prefill-chunk edge of the writer, and carry the writer's running
+    GLASS stat sums (``pstats``, the PR-2 left-fold at exactly this many
+    prompt tokens) plus the recurrent-state rows (``state_rows``, rwkv6 /
+    hybrid) at the same position — everything a cache hit needs to resume
+    ``prefill_chunk`` bit-identically to an uncached prefill.
+    """
+
+    key: int
+    parent: int
+    depth: int  # blocks from the chain root, 1-based
+    block: int  # physical block id, or -1 (pure-state family: no KV blocks)
+    tokens: tuple
+    resumable: bool = False
+    pstats: Any = None
+    state_rows: Any = None
+    tick: int = 0  # LRU stamp
+
+
+class PrefixCache:
+    """Hash index over full KV blocks keyed by (token-ids, model config)
+    prefix chains, with LRU eviction of refcount-0 entries.
+
+    The cache never owns device memory itself: entries point at allocator
+    blocks whose owner counts are managed by :class:`BlockPool` — a block
+    referenced only by the index sits at refcount 0 (retained, evictable),
+    and a hit resurrects it via ``incref``.  Eviction walks chain LEAVES
+    first (an interior block may still anchor a deeper cached prefix) and
+    only frees blocks nobody owns.
+    """
+
+    def __init__(self, block_size: int, namespace: str = ""):
+        self.block_size = block_size
+        self.entries: Dict[int, PrefixEntry] = {}
+        self.by_block: Dict[int, int] = {}  # physical block id -> entry key
+        self._children: Dict[int, int] = {}  # entry key -> child-entry count
+        self._root = hash(("glass-prefix-cache", namespace))
+        self._tick = 0
+        # telemetry (the serve bench's shared_prefix scenario reads these)
+        self.hits = 0
+        self.misses = 0
+        self.tokens_saved = 0
+        self.inserts = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def _child_key(self, parent: int, toks: tuple) -> int:
+        return hash((parent, toks))
+
+    def _bump(self, entry: PrefixEntry) -> None:
+        self._tick += 1
+        entry.tick = self._tick
+
+    def lookup(self, prompt, align: int) -> tuple:
+        """Longest resumable cached prefix of ``prompt``.
+
+        Returns ``(fork_rows, entries)``: the chain of :class:`PrefixEntry`
+        covering ``fork_rows`` prompt tokens, where ``fork_rows`` is the
+        deepest chain position that (a) carries a resume snapshot
+        (``resumable``), (b) is a multiple of ``align`` (the engine's
+        ``chunk_tokens`` — resumed chunk boundaries must coincide with the
+        cold run's, or the stat left-fold would associate differently),
+        and (c) leaves at least one prompt token to prefill (the final
+        chunk must produce the first-token logits).  ``(0, [])`` on miss.
+        """
+        bs = self.block_size
+        key = self._root
+        chain: List[PrefixEntry] = []
+        best = 0
+        for d in range(1, len(prompt) // bs + 1):
+            toks = tuple(int(t) for t in prompt[(d - 1) * bs : d * bs])
+            key = self._child_key(key, toks)
+            e = self.entries.get(key)
+            if e is None or e.tokens != toks:
+                break
+            chain.append(e)
+            rows = d * bs
+            if e.resumable and rows % align == 0 and rows <= len(prompt) - 1:
+                best = d
+        if not best:
+            return 0, []
+        hit = chain[:best]
+        for e in hit:  # protect the whole path from eviction races
+            self._bump(e)
+        return best * bs, hit
+
+    def insert_chain(
+        self,
+        prompt,
+        upto: int,
+        blocks,
+        *,
+        resumable: bool = False,
+        pstats=None,
+        state_rows=None,
+    ) -> int:
+        """Register the full blocks covering ``prompt[:upto]`` rows, block
+        ``d``'s rows living in physical block ``blocks[d-1]``.
+
+        Chains are extended, never overwritten: a key that already exists
+        keeps its original physical block (the concurrent-writer dedup —
+        the second writer simply keeps its private copy unregistered).
+        When ``resumable``, the terminal entry (at exactly ``upto`` rows,
+        which must be block-aligned) is stamped with the resume snapshot —
+        including an existing entry that lacked one (snapshots are
+        physical-block-independent, so upgrading a dedup'd entry is
+        sound).  Returns the number of NEW entries created."""
+        bs = self.block_size
+        full = upto // bs
+        parent = self._root
+        created = 0
+        for d in range(1, full + 1):
+            toks = tuple(int(t) for t in prompt[(d - 1) * bs : d * bs])
+            key = self._child_key(parent, toks)
+            e = self.entries.get(key)
+            if e is None:
+                b = int(blocks[d - 1]) if blocks is not None else -1
+                if b >= 0 and b in self.by_block:
+                    # one physical block cannot anchor two entries — can
+                    # only happen on a foreign block id; fail loudly
+                    raise ValueError(f"block {b} already registered")
+                e = PrefixEntry(key=key, parent=parent, depth=d, block=b, tokens=toks)
+                self.entries[key] = e
+                if b >= 0:
+                    self.by_block[b] = key
+                if parent != self._root:
+                    self._children[parent] = self._children.get(parent, 0) + 1
+                created += 1
+                self.inserts += 1
+            elif e.tokens != toks:  # hash collision: leave the chain alone
+                break
+            if resumable and d * bs == upto and not e.resumable:
+                e.resumable = True
+                e.pstats = pstats
+                e.state_rows = state_rows
+            self._bump(e)
+            parent = key
+        return created
+
+    def evictable(self, allocator: Optional[BlockAllocator]) -> List[PrefixEntry]:
+        """Refcount-0 chain leaves, LRU-first (block-less pure-state
+        entries have no owners by construction)."""
+        out = [
+            e for e in self.entries.values()
+            if self._children.get(e.key, 0) == 0
+            and (e.block < 0 or allocator.refcount(e.block) == 0)
+        ]
+        out.sort(key=lambda e: e.tick)
+        return out
+
+    def evict_for(self, allocator: Optional[BlockAllocator], n_blocks: int) -> int:
+        """Free up to ``n_blocks`` blocks by evicting LRU refcount-0
+        leaves (re-scanning after each eviction — freeing a leaf may
+        expose its parent).  Returns the number of blocks freed."""
+        freed = 0
+        while freed < n_blocks:
+            cands = [e for e in self.evictable(allocator) if e.block >= 0]
+            if not cands:
+                break
+            self.evict(allocator, cands[0])
+            freed += 1
+        return freed
+
+    def evict(self, allocator: Optional[BlockAllocator], entry: PrefixEntry) -> None:
+        """Drop one refcount-0 leaf entry and free its block (if any)."""
+        if self._children.get(entry.key, 0):
+            raise ValueError(f"evicting interior cache entry at depth {entry.depth}")
+        if entry.block >= 0:
+            allocator.free([entry.block])
+            del self.by_block[entry.block]
+        del self.entries[entry.key]
+        if entry.parent != self._root:
+            self._children[entry.parent] -= 1
+            if not self._children[entry.parent]:
+                del self._children[entry.parent]
+        self.evictions += 1
 
 
 def paged_layout(model, max_len: int):
@@ -243,6 +527,8 @@ class BlockPool:
         block_size: int = 16,
         num_blocks: Optional[int] = None,
         watermark: int = 0,
+        prefix_cache: bool = False,
+        cache_namespace: str = "",
     ):
         self.model = model
         self.max_slots = max_slots
@@ -273,6 +559,14 @@ class BlockPool:
 
         self.cache = jax.tree.map(arena_shape, c1, self.axes, self.seq_axes, self.paged)
         self.allocator = BlockAllocator(num_blocks) if self.has_paged else None
+        # content-addressed prefix cache (opt-in).  Paged families share
+        # physical KV blocks; pure-state families (rwkv6) cache block-less
+        # chain entries whose resume snapshots carry the state rows.  The
+        # namespace folds the model config into every chain key so one
+        # process serving two models can never cross-hit.
+        self.prefix_cache: Optional[PrefixCache] = (
+            PrefixCache(block_size, cache_namespace) if prefix_cache else None
+        )
         self.block_table = np.zeros((max_slots, self.nb_max), np.int32)  # 0 = trash
         self.lengths = np.zeros((max_slots,), np.int32)
         self.active = np.zeros((max_slots,), bool)
@@ -364,11 +658,32 @@ class BlockPool:
     def blocks_in_use(self) -> int:
         return self.allocator.n_live if self.allocator else 0
 
+    @property
+    def n_reclaimable_blocks(self) -> int:
+        """Cache-retained blocks at refcount 0 — the slack beyond the free
+        stack that :meth:`_alloc_blocks` can reclaim by eviction.  Every
+        owner of a cached block also owns its chain ancestors, so a
+        refcount-0 entry's whole subtree is refcount 0 and leaf-first
+        eviction drains exactly this many blocks."""
+        if self.prefix_cache is None or self.allocator is None:
+            return 0
+        return sum(
+            1 for b in self.prefix_cache.by_block
+            if self.allocator.refcount(b) == 0
+        )
+
+    @property
+    def n_available_blocks(self) -> int:
+        """Free stack + reclaimable cache slack: the supply admission,
+        growth, and swap-in checks must measure against (all three
+        allocate through the evicting :meth:`_alloc_blocks`)."""
+        return self.n_free_blocks + self.n_reclaimable_blocks
+
     def blocks_needed(self, rows: int) -> int:
         return -(-rows // self.block_size) if self.has_paged else 0
 
     def fits(self, rows: int) -> bool:
-        return (not self.has_paged) or self.blocks_needed(rows) <= self.n_free_blocks
+        return (not self.has_paged) or self.blocks_needed(rows) <= self.n_available_blocks
 
     def fits_admission(self, rows: int, reserved: int = 0) -> bool:
         """Admission-time fit: must leave the watermark reserve free (growth
@@ -382,7 +697,7 @@ class BlockPool:
         if not self.has_paged:
             return True
         wm = self.watermark if self.active.any() else 0
-        return self.blocks_needed(rows) + wm + reserved <= self.n_free_blocks
+        return self.blocks_needed(rows) + wm + reserved <= self.n_available_blocks
 
     def held_blocks(self, slot: int) -> int:
         return len(self._held.get(slot, ()))
@@ -422,6 +737,19 @@ class BlockPool:
         bs = self.block_size
         pages = [int(self.block_table[slot, r // bs]) for r in range(start, end)]
         offs = [r % bs for r in range(start, end)]
+        # copy-on-write invariant: speculative rows live strictly past the
+        # prompt, and shared prefix blocks are never written after
+        # registration — un-scattering one would corrupt every reader, so
+        # a shared/cached page here is a bookkeeping bug, not a request
+        for pg in set(pages):
+            if pg == BlockAllocator.TRASH:
+                continue
+            if self.allocator.refcount(pg) > 1 or (
+                self.prefix_cache is not None and pg in self.prefix_cache.by_block
+            ):
+                raise ValueError(
+                    f"rollback would un-scatter shared/cached block {pg}"
+                )
         p = pow2_bucket(len(pages), max(1, self.nb_max * bs))
         pages += [BlockAllocator.TRASH] * (p - len(pages))
         offs += [0] * (p - len(offs))
@@ -446,7 +774,36 @@ class BlockPool:
         extra = held[need:]
         del held[need:]
         self.block_table[slot, need : need + len(extra)] = 0
-        self.allocator.free(list(reversed(extra)))
+        self._release_blocks(list(reversed(extra)))
+
+    # -- block ownership (refcounts + prefix-cache retention) ----------------
+
+    def _alloc_blocks(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` fresh blocks, evicting LRU refcount-0 prefix
+        cache entries under pressure (retained cache blocks are exactly
+        the reclaimable slack — nobody owns them)."""
+        got = self.allocator.alloc(n)
+        if got is None and self.prefix_cache is not None:
+            self.prefix_cache.evict_for(self.allocator, n - self.allocator.n_free)
+            got = self.allocator.alloc(n)
+        return got
+
+    def _release_blocks(self, blocks: List[int]) -> None:
+        """Drop one ownership reference per block.  Fully-released blocks
+        return to the free stack UNLESS the prefix cache still indexes
+        them — those are retained at refcount 0 (LRU-evictable) so a
+        future request with the same prefix can resurrect them."""
+        if not blocks:
+            return
+        zeroed = self.allocator.decref(list(blocks))
+        pc = self.prefix_cache
+        if pc is None:
+            self.allocator.free(zeroed)
+            return
+        self.allocator.free([b for b in zeroed if b not in pc.by_block])
+        for b in zeroed:
+            if b in pc.by_block:
+                pc._bump(pc.entries[pc.by_block[b]])  # fresh in LRU order
 
     # -- request lifecycle --------------------------------------------------
 
@@ -457,7 +814,7 @@ class BlockPool:
             return None
         blocks: List[int] = []
         if self.has_paged:
-            got = self.allocator.alloc(self.blocks_needed(rows))
+            got = self._alloc_blocks(self.blocks_needed(rows))
             if got is None:
                 return None
             blocks = got
@@ -469,6 +826,64 @@ class BlockPool:
         self.active[slot] = True
         self.peak_blocks = max(self.peak_blocks, self.blocks_in_use)
         return slot
+
+    def admit_prefix(self, rows: int, entries: List[PrefixEntry]) -> Optional[int]:
+        """Admission on a prefix-cache hit: take shared ownership of the
+        hit chain's blocks (they enter this request's table read-only —
+        the copy-on-write contract: all writes land past the fork point,
+        in private blocks) and allocate only the private remainder of the
+        ``rows`` footprint.  All-or-nothing like :meth:`admit`."""
+        if not self._free_slots:
+            return None
+        shared = [e.block for e in entries if e.block >= 0]
+        blocks: List[int] = []
+        if self.has_paged:
+            # claim the chain FIRST: the private allocation below may evict
+            # refcount-0 cache blocks, and it must never reclaim the ones
+            # this admission is resurrecting
+            self.allocator.incref(shared)
+            need = self.blocks_needed(rows) - len(shared)
+            got = self._alloc_blocks(max(need, 0))
+            if got is None:
+                self._release_blocks(shared)
+                return None
+            blocks = shared + got
+        slot = self._free_slots.pop()
+        self._held[slot] = blocks
+        self.block_table[slot, :] = 0
+        self.block_table[slot, : len(blocks)] = blocks
+        self.lengths[slot] = 0
+        self.active[slot] = True
+        self.peak_blocks = max(self.peak_blocks, self.blocks_in_use)
+        return slot
+
+    def lookup_prefix(self, prompt, align: int) -> Tuple[int, List[PrefixEntry]]:
+        """Longest resumable cached prefix of ``prompt`` (hit/miss counted
+        here — call once per admission).  See :meth:`PrefixCache.lookup`."""
+        pc = self.prefix_cache
+        if pc is None:
+            return 0, []
+        fork, entries = pc.lookup(prompt, align)
+        if fork:
+            pc.hits += 1
+            pc.tokens_saved += fork
+        else:
+            pc.misses += 1
+        return fork, entries
+
+    def register_prefix(self, slot: int, prompt, upto: int, *,
+                        resumable: bool = False, pstats=None,
+                        state_rows=None) -> int:
+        """Index the full blocks covering ``prompt[:upto]`` rows written
+        by ``slot`` (no-op without a prefix cache).  Call after each
+        prefill chunk; ``resumable`` stamps the terminal entry with the
+        resume snapshot.  See :meth:`PrefixCache.insert_chain`."""
+        pc = self.prefix_cache
+        if pc is None or upto < self.block_size:
+            return 0
+        blocks = self._held[slot] if self.has_paged else None
+        return pc.insert_chain(prompt, upto, blocks, resumable=resumable,
+                               pstats=pstats, state_rows=state_rows)
 
     def ensure_capacity(self, slot: int, rows: int) -> bool:
         """Allocate-on-boundary: grow ``slot`` to cover ``rows`` KV rows,
@@ -486,7 +901,7 @@ class BlockPool:
         held = len(self._held[slot])
         if need <= held:
             return True
-        got = self.allocator.alloc(need - held)
+        got = self._alloc_blocks(need - held)
         if got is None:
             return False
         self._held[slot].extend(got)
@@ -501,59 +916,93 @@ class BlockPool:
         return list(blocks) + [BlockAllocator.TRASH] * (p - len(blocks))
 
     def swap_out(self, slot: int) -> SwappedRequest:
-        """Copy the slot's blocks + state rows to host and free everything.
+        """Copy the slot's PRIVATE blocks + state rows to host and free
+        everything it exclusively owns.  Shared (prefix-cache-registered)
+        blocks are SKIPPED: they stay on device with this request's
+        ownership reference intact (immutable + pinned, so no bytes move
+        and no eviction can reclaim them), and :meth:`swap_in` splices the
+        same physical ids back into the rebuilt table.
 
         The returned :class:`SwappedRequest` is the request's complete
         device state; :meth:`swap_in` restores it bit-identical."""
         if not self.active[slot]:
             raise ValueError(f"slot {slot} is not active")
         blocks = list(self._held.get(slot, ()))
-        padded = self._pad_blocks(blocks)
+        pc = self.prefix_cache
+        keep = (
+            {b for b in blocks if b in pc.by_block} if pc is not None else set()
+        )
+        kept = [(i, b) for i, b in enumerate(blocks) if b in keep]
+        priv = [b for b in blocks if b not in keep]
+        padded = self._pad_blocks(priv)
         host = jax.device_get(
             self._swap_gather(self.cache, jnp.asarray(padded, jnp.int32), jnp.int32(slot))
         )
-        live_frac_num, live_frac_den = max(1, len(blocks)), len(padded)
+        live_frac_num, live_frac_den = max(1, len(priv)), len(padded)
         nbytes = 0
         for h, pg in zip(jax.tree.leaves(host), jax.tree.leaves(self.paged)):
             nbytes += h.nbytes * live_frac_num // live_frac_den if pg else h.nbytes
         sw = SwappedRequest(
-            host=host, n_blocks=len(blocks), n_padded=len(padded),
-            length=int(self.lengths[slot]), nbytes=nbytes,
+            host=host, n_blocks=len(priv), n_padded=len(padded),
+            length=int(self.lengths[slot]), nbytes=nbytes, kept=kept,
         )
-        self.free(slot)
+        # release ONLY the private blocks — the swapped request carries
+        # its ownership of the kept (shared) blocks through to swap-in
+        self._release_slot(slot, priv)
         return sw
 
     def swap_in(self, sw: SwappedRequest) -> Optional[int]:
-        """Restore a swapped request into a fresh slot + fresh blocks.
-        Returns the new slot, or None when slots/blocks are unavailable
-        (all-or-nothing, so a failed swap-in changes nothing)."""
+        """Restore a swapped request into a fresh slot, re-allocating its
+        private blocks and splicing kept shared blocks back at their
+        original table positions.  Returns the new slot, or None when
+        slots/blocks are unavailable (all-or-nothing, so a failed swap-in
+        changes nothing)."""
         if not self._free_slots:
             return None
-        blocks: List[int] = []
+        priv: List[int] = []
         if self.has_paged and sw.n_blocks:
-            got = self.allocator.alloc(sw.n_blocks)
+            got = self._alloc_blocks(sw.n_blocks)
             if got is None:
                 return None
-            blocks = got
+            priv = got
         slot = self._free_slots.pop()
+        kept_at = dict(sw.kept)
+        it = iter(priv)
+        blocks = [
+            kept_at[i] if i in kept_at else next(it)
+            for i in range(sw.n_blocks + len(sw.kept))
+        ]
         self._held[slot] = blocks
         self.block_table[slot, :] = 0
         self.block_table[slot, : len(blocks)] = blocks
-        padded = blocks + [BlockAllocator.TRASH] * (sw.n_padded - len(blocks))
+        padded = priv + [BlockAllocator.TRASH] * (sw.n_padded - len(priv))
         self.cache = self._swap_scatter(
             self.cache, sw.host, jnp.asarray(padded, jnp.int32), jnp.int32(slot)
         )
         self.lengths[slot] = sw.length
         self.active[slot] = True
         self.peak_blocks = max(self.peak_blocks, self.blocks_in_use)
+        sw.kept = []  # ownership moved back to the slot's held list
         return slot
 
+    def release_swapped(self, sw: Optional[SwappedRequest]) -> None:
+        """Abort of a swapped-out request: drop the ownership references
+        it kept on shared device blocks (idempotent)."""
+        if sw is None or not sw.kept:
+            return
+        self._release_blocks([b for _, b in sw.kept])
+        sw.kept = []
+
     def free(self, slot: int) -> None:
-        """Evict: return the slot's blocks, zero its state rows and table."""
+        """Evict: release the slot's blocks (shared ones decref — the
+        prefix cache retains fully-released registered blocks), zero its
+        state rows and table."""
         if not self.active[slot]:
             raise ValueError(f"slot {slot} is not active")
-        if self._held.get(slot):
-            self.allocator.free(self._held[slot])
+        self._release_slot(slot, list(self._held.get(slot, ())))
+
+    def _release_slot(self, slot: int, release: List[int]) -> None:
+        self._release_blocks(release)
         self._held.pop(slot, None)
         self.block_table[slot, :] = 0
         self.lengths[slot] = 0

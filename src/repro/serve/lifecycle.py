@@ -60,6 +60,20 @@ AND seeded-sampled requests (the tested guarantee): per-request sampling
 is counter-based — every draw is a pure function of (request seed,
 generated position, logits) — so a replayed position regenerates the same
 token and there is no engine-global RNG stream for preemption to shift.
+
+**Shared-block ownership (prefix caching).**  With the pool's prefix
+cache enabled, admission consults the cache first: a hit binds the cached
+chain's blocks into the request's table under *shared* ownership
+(refcounted; copy-on-write — every write lands past the fork point in
+private blocks) and prefill resumes at ``cached_rows`` from the entry's
+stat-sum / state-row snapshot.  Preemption respects sharing: swap-out
+SKIPS shared blocks (the swapped request keeps its reference; only
+private blocks move to host), recompute's ``pool.free`` decrefs shared
+blocks instead of freeing them, speculative rollback never un-scatters
+into a block with other owners (rollback rows live strictly past the
+prompt — the pool raises if that invariant is ever violated), and an
+abort in any state — including mid-prefill while holding shared blocks,
+or while swapped out — releases exactly the references the request holds.
 """
 from __future__ import annotations
 
@@ -150,6 +164,13 @@ class LiveRequest:
     state: ReqState = ReqState.WAITING
     slot: int = -1  # pool slot while PREFILLING / RUNNING, else -1
     prefill_pos: int = 0  # prompt tokens already prefilled
+    # prefix-cache fork point of the CURRENT admission: prompt rows served
+    # from shared cached blocks (prefill started at this position, with
+    # stat sums / state rows restored from the cache entry's snapshot).
+    # Reset at every admission — a recompute re-admission may fork at a
+    # different depth than the first pass and still build the identical
+    # fused mask (cached snapshots are left-folds of the same chunk sums).
+    cached_rows: int = 0
     outputs: List[int] = field(default_factory=list)  # generated token ids
     pending: int = 0  # next token to feed into decode
     replay_left: int = 0  # forced re-feeds outstanding after a recompute resume

@@ -52,6 +52,8 @@ class SamplingParams:
 
     temperature: float = 1.0
     top_k: int = 0  # 0 = no top-k filtering
+    top_p: float = 1.0  # 1.0 = no nucleus filtering
+    min_p: float = 0.0  # 0.0 = no min-p filtering
     seed: Optional[int] = None  # None = greedy (the special case)
     greedy: bool = False  # force greedy even with a seed set
     eos_token_id: Optional[int] = None
@@ -62,6 +64,10 @@ class SamplingParams:
             raise ValueError(f"temperature must be >= 0, got {self.temperature}")
         if self.top_k < 0:
             raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not (0.0 < self.top_p <= 1.0):
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if not (0.0 <= self.min_p <= 1.0):
+            raise ValueError(f"min_p must be in [0, 1], got {self.min_p}")
         object.__setattr__(self, "stop_token_ids", tuple(self.stop_token_ids))
         if len(self.stop_set) > MAX_STOP_IDS:
             raise ValueError(
@@ -108,16 +114,49 @@ def top_k_filter_dynamic(logits: jax.Array, k: jax.Array) -> jax.Array:
     return jnp.where(keep, logits, NEG)
 
 
+def top_p_filter_dynamic(logits: jax.Array, p: jax.Array) -> jax.Array:
+    """Per-row nucleus (top-p) filter with a *traced* p (B,): keep the
+    smallest set of tokens whose probability mass reaches ``p[b]``
+    (p >= 1 keeps everything; the argmax always survives).  Same
+    sort-then-threshold shape as :func:`top_k_filter_dynamic`, so it adds
+    no data-dependent control flow to the fused decode scan."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    srt = jnp.sort(probs, axis=-1)[..., ::-1]  # descending per row
+    cum = jnp.cumsum(srt, axis=-1)
+    # a sorted entry is kept while the mass BEFORE it is < p; map that back
+    # to vocab order via the per-row probability threshold of the last kept
+    # sorted entry (ties keep both — a superset never drops the nucleus)
+    keep_sorted = (cum - srt) < p[..., None]
+    # threshold = the SMALLEST kept sorted prob (the first entry is always
+    # kept, so the min is well-defined)
+    th = jnp.min(jnp.where(keep_sorted, srt, jnp.inf), axis=-1, keepdims=True)
+    keep = (p[..., None] >= 1.0) | (probs >= th)
+    return jnp.where(keep, logits, NEG)
+
+
+def min_p_filter_dynamic(logits: jax.Array, mp: jax.Array) -> jax.Array:
+    """Per-row min-p filter with a *traced* mp (B,): keep tokens whose
+    probability is >= ``mp[b]`` times the row's max probability (mp = 0
+    keeps everything; the argmax always survives by construction)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    top = jnp.max(probs, axis=-1, keepdims=True)
+    keep = probs >= mp[..., None] * top
+    return jnp.where(keep, logits, NEG)
+
+
 def sample_positional(
     logits: jax.Array,  # (B, V) f32
     seeds: jax.Array,  # (B,) int32/uint32 per-request seeds
     pos: jax.Array,  # (B,) int32 generated position of THIS draw
     temperature: jax.Array,  # (B,) f32
     top_k: jax.Array,  # (B,) int32 (0 = off)
+    top_p: Optional[jax.Array] = None,  # (B,) f32 (1.0 = off)
+    min_p: Optional[jax.Array] = None,  # (B,) f32 (0.0 = off)
 ) -> jax.Array:
     """Counter-based per-slot sampling: row ``b`` draws from
     ``logits[b]`` with key ``positional_key(seeds[b], pos[b])`` after
-    per-row temperature scaling and dynamic top-k filtering.
+    per-row temperature scaling and dynamic top-k / top-p / min-p
+    filtering (filters compose in that order, each per-row traced).
 
     Deterministic per (seed, position, logits) — the engine's sampled
     streams are replayable because this function has no other inputs.
@@ -125,6 +164,10 @@ def sample_positional(
     logits = logits.astype(jnp.float32)
     scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
     filt = top_k_filter_dynamic(scaled, top_k)
+    if top_p is not None:
+        filt = top_p_filter_dynamic(filt, top_p)
+    if min_p is not None:
+        filt = min_p_filter_dynamic(filt, min_p)
     keys = jax.vmap(positional_key)(seeds, pos)
     return jax.vmap(jax.random.categorical)(keys, filt).astype(jnp.int32)
 

@@ -30,6 +30,13 @@ def pytest_configure(config):
         "based PRNG, GlassParams densities, streaming RequestOutput, abort, "
         "EOS early finish); CI runs it as its own lane",
     )
+    config.addinivalue_line(
+        "markers",
+        "prefix_cache: shared-prefix invariant suite (copy-on-write block "
+        "tables, refcounted prefix cache, bit-identical warm-vs-cold "
+        "prefill); CI runs it as its own lane under PREFIX_GLASS_MODE=fused "
+        "and PREFIX_GLASS_MODE=block_sparse",
+    )
 
 
 @pytest.fixture(scope="session")

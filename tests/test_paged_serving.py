@@ -92,7 +92,7 @@ def test_block_allocator_properties(nb, ops):
             else:
                 assert got is None  # all-or-nothing
         else:
-            alloc.free(held.pop(0))
+            alloc.release(held.pop(0))  # sole owner: decref-to-zero + free
         flat = [b for h in held for b in h]
         assert len(flat) == len(set(flat))  # no block owned twice
         assert BlockAllocator.TRASH not in flat
@@ -103,14 +103,85 @@ def test_block_allocator_properties(nb, ops):
 def test_block_allocator_double_free_raises():
     alloc = BlockAllocator(6)
     a = alloc.alloc(2)
-    alloc.free(a)
+    alloc.release(a)
     with pytest.raises(ValueError):
-        alloc.free(a)  # double free
+        alloc.free(a)  # double free (no longer live)
     with pytest.raises(ValueError):
         alloc.free([99])  # foreign id
     b = alloc.alloc(5)
     assert b is not None and BlockAllocator.TRASH not in b
     assert alloc.alloc(1) is None
+    with pytest.raises(ValueError):
+        alloc.free(b)  # still referenced: strict free refuses owned blocks
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=13),
+    st.lists(
+        st.tuples(st.integers(min_value=0, max_value=3),
+                  st.integers(min_value=0, max_value=5)),
+        max_size=60,
+    ),
+)
+def test_block_allocator_refcount_properties(nb, ops):
+    """Random fork/share/free/evict interleavings over the refcounted
+    allocator: no double-free, a referenced block is never freed, zeroed
+    blocks stay live until explicitly freed (the cache-retention state),
+    and draining all owners returns every block to the free stack."""
+    alloc = BlockAllocator(nb)
+    held = []  # list of lists: each inner list is one ownership reference
+    retained = []  # refcount-0 blocks kept live (simulated cache entries)
+    for op, n in ops:
+        if op == 0 or not (held or retained):  # alloc
+            got = alloc.alloc(n)
+            in_use = len({b for h in held for b in h} | set(retained))
+            if n <= nb - 1 - in_use:
+                assert got is not None and len(got) == n
+                for b in got:
+                    assert alloc.refcount(b) == 1
+                held.append(got)
+            else:
+                assert got is None  # all-or-nothing
+        elif op == 1 and held:  # share: a second owner increfs the chain
+            src = held[n % len(held)]
+            alloc.incref(src)
+            held.append(list(src))
+        elif op == 2 and held:  # drop one reference
+            h = held.pop(n % len(held))
+            before = {b: alloc.refcount(b) for b in set(h)}
+            zeroed = alloc.decref(h)
+            for b in set(h):
+                if before[b] == h.count(b):  # this was the last owner
+                    assert b in zeroed or h.count(b) > 1
+            for b in zeroed:
+                assert alloc.refcount(b) == 0  # live but unowned
+                with pytest.raises(ValueError):
+                    alloc.free([b, b])  # double id in one free call
+            retained.extend(dict.fromkeys(zeroed))
+        elif retained:  # evict one retained block
+            b = retained.pop(n % len(retained))
+            alloc.free([b])
+            with pytest.raises(ValueError):
+                alloc.free([b])  # double free
+        owned = {b for h in held for b in h}
+        for h in held:
+            for b in set(h):
+                assert alloc.refcount(b) >= 1
+        for b in retained:
+            if b not in owned:
+                assert alloc.refcount(b) == 0
+        assert BlockAllocator.TRASH not in owned
+        assert alloc.n_free + alloc.n_live == nb - 1
+    # drain: releasing every reference then freeing retained blocks returns
+    # the allocator to its initial all-free state
+    for h in held:
+        retained.extend(alloc.decref(h))
+    for b in retained:
+        assert alloc.refcount(b) == 0  # every refcount reached zero by drain
+        alloc.free([b])
+    assert alloc.n_live == 0
+    assert alloc.n_free == nb - 1
 
 
 @pytest.mark.parametrize("cfg", [DENSE, SSM, HYBRID], ids=["dense", "ssm", "hybrid"])

@@ -35,8 +35,10 @@ from repro.serve.lifecycle import Lifecycle, ReqState
 from repro.serve.sampling import (
     MAX_STOP_IDS,
     SamplingParams,
+    min_p_filter_dynamic,
     sample_positional,
     top_k_filter_dynamic,
+    top_p_filter_dynamic,
 )
 from repro.serve.scheduler import Request
 
@@ -160,6 +162,85 @@ def test_dynamic_top_k_filter():
                           jnp.asarray([2.0, 2.0], jnp.float32),
                           jnp.asarray([1, 1], jnp.int32))
     np.testing.assert_array_equal(np.asarray(g), [0, 0])
+
+
+def test_sampling_params_top_p_min_p_validation():
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=1.5)
+    with pytest.raises(ValueError, match="min_p"):
+        SamplingParams(min_p=-0.1)
+    with pytest.raises(ValueError, match="min_p"):
+        SamplingParams(min_p=1.5)
+    # the no-op defaults stay greedy-compatible
+    sp = SamplingParams(seed=1, temperature=0.8, top_p=0.9, min_p=0.05)
+    assert not sp.is_greedy
+
+
+def test_dynamic_top_p_filter():
+    # softmax([3, 1, 2, 0]) ~= [.644, .087, .237, .032]; sorted-desc
+    # cumulative-BEFORE-token: [0, .644, .881, .968]
+    lg = jnp.asarray([[3.0, 1.0, 2.0, 0.0]] * 3)
+    p = jnp.asarray([0.5, 0.7, 1.0], jnp.float32)
+    out = np.asarray(top_p_filter_dynamic(lg, p))
+    kept = (out > -1e29).sum(axis=-1)
+    assert kept[0] == 1 and out[0][0] > -1e29  # nucleus = just the top token
+    assert kept[1] == 2 and out[1][2] > -1e29  # .644 < .7 admits the runner-up
+    np.testing.assert_array_equal(out[2], np.asarray(lg[2]))  # p=1: no filter
+    # surviving logits pass through unchanged (the draw stays counter-exact)
+    np.testing.assert_array_equal(out[1][[0, 2]], np.asarray(lg)[1][[0, 2]])
+    # top_p small enough to isolate the mode degenerates to argmax at any
+    # temperature — the nucleus analogue of the top_k=1 property
+    g = sample_positional(lg, jnp.asarray([5, 6, 7], jnp.int32),
+                          jnp.asarray([0, 0, 0], jnp.int32),
+                          jnp.asarray([3.0, 3.0, 3.0], jnp.float32),
+                          jnp.zeros((3,), jnp.int32),
+                          top_p=jnp.asarray([0.1, 0.1, 0.1], jnp.float32))
+    np.testing.assert_array_equal(np.asarray(g), [0, 0, 0])
+
+
+def test_dynamic_min_p_filter():
+    # keep tokens with prob >= mp * max-prob: mp=.3 -> {.644, .237}
+    lg = jnp.asarray([[3.0, 1.0, 2.0, 0.0]] * 2)
+    mp = jnp.asarray([0.3, 0.0], jnp.float32)
+    out = np.asarray(min_p_filter_dynamic(lg, mp))
+    assert (out[0] > -1e29).sum() == 2
+    assert out[0][0] > -1e29 and out[0][2] > -1e29
+    np.testing.assert_array_equal(out[1], np.asarray(lg[1]))  # mp=0: no filter
+    # near-1 min-p isolates the mode -> argmax
+    g = sample_positional(lg, jnp.asarray([5, 6], jnp.int32),
+                          jnp.asarray([0, 0], jnp.int32),
+                          jnp.asarray([2.0, 2.0], jnp.float32),
+                          jnp.zeros((2,), jnp.int32),
+                          min_p=jnp.asarray([0.99, 0.99], jnp.float32))
+    np.testing.assert_array_equal(np.asarray(g), [0, 0])
+
+
+def test_top_p_min_p_streams_reproducible_and_schedule_invariant():
+    """Nucleus/min-p requests keep the counter-based contract: identical
+    engines replay the stream bit-identically, the filters actually bite
+    (the unfiltered stream diverges), and a neighbor in the batch does not
+    perturb the draws."""
+    sp = SamplingParams(temperature=1.0, seed=7, top_p=0.3, min_p=0.05)
+    toks = []
+    for _ in range(2):
+        _, _, _, eng = _engine()
+        u = eng.add_request(_prompt(50), 12, sampling=sp)
+        toks.append(_drain(eng)[u].tokens)
+    np.testing.assert_array_equal(toks[0], toks[1])
+    _, _, _, base_eng = _engine()
+    ub = base_eng.add_request(_prompt(50), 12,
+                              sampling=SamplingParams(temperature=1.0, seed=7))
+    base = _drain(base_eng)[ub].tokens
+    assert np.any(base != toks[0])  # the filters changed some draw
+    # schedule invariance next to a greedy neighbor
+    _, _, _, mixed = _engine(max_slots=2)
+    u0 = mixed.add_request(_prompt(50), 12, sampling=sp)
+    u1 = mixed.add_request(_prompt(51), 12)
+    outs = _drain(mixed)
+    np.testing.assert_array_equal(outs[u0].tokens, toks[0])
+    assert outs[u1].finish_reason == "length"
 
 
 # -- model/launch layer: one key convention across all three entry points ----
