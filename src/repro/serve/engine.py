@@ -1475,13 +1475,23 @@ class PagedEngine(_QueueEngineBase):
             # finalizes into) is bit-identical — recompute re-admissions
             # included.
             fork, entries = self.pool.lookup_prefix(r.prompt, self.chunk_tokens)
+            slot = None
             if fork:
                 rows = (
                     self._rows_needed(r) if self.alloc_mode == "full"
                     else fork + min(self.chunk_tokens, len(r.prompt) - fork)
                 )
                 slot = self.pool.admit_prefix(rows, entries)
-                assert slot is not None  # a hit needs <= the cold path's blocks
+                if slot is None:
+                    # ``_fits`` counted the hit chain's own refcount-0 blocks
+                    # as reclaimable supply, but binding the chain pins them
+                    # — when the private remainder then cannot be allocated,
+                    # degrade to a cold admission, whose first-chunk need is
+                    # exactly what ``_fits`` verified (its allocation may
+                    # evict the very chain we failed to pin)
+                    self.pool.cancel_prefix_hit(fork)
+                    fork = 0
+            if slot is not None:
                 e.prefill_pos = fork
                 e.cached_rows = fork
                 self.pool.lengths[slot] = fork
@@ -1490,7 +1500,12 @@ class PagedEngine(_QueueEngineBase):
                 self.pool.restore_state_rows(slot, tail.state_rows)
             else:
                 slot = self.pool.admit(self._first_rows(r))
-                assert slot is not None  # _fits held and a slot was free
+                if slot is None:
+                    # ``_fits`` held, so this is belt-and-braces: requeue
+                    # (policy order preserved) and retry on a later tick
+                    # rather than corrupting pool state
+                    self.scheduler.requeue(r)
+                    return
                 e.prefill_pos = 0
                 e.cached_rows = 0
                 e.pstats = None
@@ -1730,8 +1745,12 @@ class PagedEngine(_QueueEngineBase):
         if self._growth_need(run, k + 1) > self.pool.n_available_blocks:
             return 0
         for e in run:
-            ok = self.pool.ensure_capacity(e.slot, int(self.pool.lengths[e.slot]) + k + 1)
-            assert ok, "speculative growth fit was just established"
+            if not self.pool.ensure_capacity(e.slot, int(self.pool.lengths[e.slot]) + k + 1):
+                # the fit was measured against reclaimable slack that can
+                # transiently exceed what eviction can drain (see
+                # n_reclaimable_blocks) — fall back to plain decode, whose
+                # growth path preempts if even H=1 cannot be supplied
+                return 0
         return k
 
     def _spec_draft(self, run: List[LiveRequest], k: int) -> None:
@@ -1979,21 +1998,36 @@ class PagedEngine(_QueueEngineBase):
         """Allocate-on-boundary growth for one fused chunk: shrink H before
         shrinking the working set (a smaller H needs fewer boundary
         crossings than a preemption), then preempt victims until the
-        remaining ``run`` fits.  Returns the surviving run and H."""
+        remaining ``run`` fits.  Returns the surviving run and H.
+
+        The fit check measures supply against reclaimable cache slack,
+        which can transiently exceed what eviction can actually drain
+        (see ``n_reclaimable_blocks``) — so a failed allocation after a
+        passing check is recoverable pressure, answered by preempting
+        another victim and re-fitting, not an invariant violation."""
         if not (self.pool.has_paged and self.alloc_mode == "incremental"):
             return run, H
         while H > 1 and self._growth_need(run, H) > self.pool.n_available_blocks:
             H //= 2
-        while self._growth_need(run, H) > self.pool.n_available_blocks:
+        while True:
+            while self._growth_need(run, H) > self.pool.n_available_blocks:
+                if not self._preempt_for_capacity():
+                    break
+                run = [e for e in run if e.state is ReqState.RUNNING]
+                if not run:
+                    return [], H
+            if all(
+                self.pool.ensure_capacity(e.slot, int(self.pool.lengths[e.slot]) + H)
+                for e in run
+            ):
+                return run, H
+            # partial growth is harmless (extra held blocks serve the next
+            # tick); each retry preempts one victim, so this terminates
             if not self._preempt_for_capacity():
-                break
+                return [], H
             run = [e for e in run if e.state is ReqState.RUNNING]
             if not run:
                 return [], H
-        for e in run:
-            ok = self.pool.ensure_capacity(e.slot, int(self.pool.lengths[e.slot]) + H)
-            assert ok, "growth fit was just established"
-        return run, H
 
     def _plain_decode(self, run: List[LiveRequest], H: int,
                       finished: List[RequestOutput]) -> None:

@@ -329,13 +329,25 @@ class PrefixCache:
     only frees blocks nobody owns.
     """
 
-    def __init__(self, block_size: int, namespace: str = ""):
+    def __init__(self, block_size: int, namespace: str = "",
+                 max_blockless: int = 256):
         self.block_size = block_size
         self.entries: Dict[int, PrefixEntry] = {}
         self.by_block: Dict[int, int] = {}  # physical block id -> entry key
         self._children: Dict[int, int] = {}  # entry key -> child-entry count
         self._root = hash(("glass-prefix-cache", namespace))
         self._tick = 0
+        # pure-state families (rwkv6) cache block-less entries whose resume
+        # snapshots retain full device state-row copies; with no paged
+        # blocks there is no allocation pressure to evict them, so a hard
+        # entry cap (LRU leaf-first) bounds that memory instead
+        self.max_blockless = max_blockless
+        self.n_blockless = 0  # incremental count of block-less entries
+        # |{registered blocks at refcount 0}| — maintained incrementally by
+        # BlockPool (retention on release-to-zero, resurrection on prefix
+        # sharing) and by :meth:`evict`, so the per-tick
+        # ``n_reclaimable_blocks`` reads are O(1) instead of an index scan
+        self.retained = 0
         # telemetry (the serve bench's shared_prefix scenario reads these)
         self.hits = 0
         self.misses = 0
@@ -400,13 +412,24 @@ class PrefixCache:
         resumable: bool = False,
         pstats=None,
         state_rows=None,
+        allocator: Optional[BlockAllocator] = None,
     ) -> int:
         """Register the full blocks covering ``prompt[:upto]`` rows, block
         ``d``'s rows living in physical block ``blocks[d-1]``.
 
         Chains are extended, never overwritten: a key that already exists
-        keeps its original physical block (the concurrent-writer dedup —
-        the second writer simply keeps its private copy unregistered).
+        keeps its original physical block when that block is still OWNED
+        (the concurrent-writer dedup — the second writer simply keeps its
+        private copy unregistered).  A retained (refcount-0) dedup target
+        is instead ADOPTED: the entry is re-pointed at the writer's
+        identical copy and the orphaned block freed.  Without adoption, a
+        writer re-populating a partially-evicted chain would hang its
+        owned deeper entries under unowned ancestors, breaking the
+        invariant that every owner of a cached block also owns its chain
+        ancestors — and with it the accounting that retained blocks are
+        leaf-evictable on demand.  Adoption converts one retained block
+        into one free block, so supply is unchanged and exact.
+
         When ``resumable``, the terminal entry (at exactly ``upto`` rows,
         which must be block-aligned) is stamped with the resume snapshot —
         including an existing entry that lacked one (snapshots are
@@ -420,6 +443,16 @@ class PrefixCache:
             toks = tuple(int(t) for t in prompt[(d - 1) * bs : d * bs])
             key = self._child_key(parent, toks)
             e = self.entries.get(key)
+            if e is not None and e.tokens == toks and allocator is not None:
+                b = int(blocks[d - 1]) if blocks is not None else -1
+                if (e.block >= 0 and b >= 0 and b != e.block
+                        and b not in self.by_block
+                        and allocator.refcount(e.block) == 0):
+                    allocator.free([e.block])
+                    del self.by_block[e.block]
+                    self.retained -= 1
+                    e.block = b
+                    self.by_block[b] = key
             if e is None:
                 b = int(blocks[d - 1]) if blocks is not None else -1
                 if b >= 0 and b in self.by_block:
@@ -430,6 +463,8 @@ class PrefixCache:
                 self.entries[key] = e
                 if b >= 0:
                     self.by_block[b] = key
+                else:
+                    self.n_blockless += 1
                 if parent != self._root:
                     self._children[parent] = self._children.get(parent, 0) + 1
                 created += 1
@@ -442,7 +477,25 @@ class PrefixCache:
                 e.state_rows = state_rows
             self._bump(e)
             parent = key
+        self._enforce_blockless_cap()
         return created
+
+    def _enforce_blockless_cap(self) -> None:
+        """LRU-evict block-less leaves past ``max_blockless`` entries.
+        Block-less entries have no owners by construction, so every leaf
+        is immediately evictable; evicting a leaf may expose its parent,
+        so repeated leaf eviction can always reach the cap.  The chain
+        just inserted is MRU — an over-cap insert trims older chains (or,
+        if it alone exceeds the cap, its own deepest tail) rather than
+        growing without bound."""
+        while self.n_blockless > self.max_blockless:
+            cands = [
+                e for e in self.entries.values()
+                if e.block < 0 and not self._children.get(e.key, 0)
+            ]
+            if not cands:
+                break
+            self.evict(None, min(cands, key=lambda e: e.tick))
 
     def evictable(self, allocator: Optional[BlockAllocator]) -> List[PrefixEntry]:
         """Refcount-0 chain leaves, LRU-first (block-less pure-state
@@ -473,8 +526,11 @@ class PrefixCache:
         if self._children.get(entry.key, 0):
             raise ValueError(f"evicting interior cache entry at depth {entry.depth}")
         if entry.block >= 0:
-            allocator.free([entry.block])
+            allocator.free([entry.block])  # raises unless refcount 0, i.e. retained
             del self.by_block[entry.block]
+            self.retained -= 1
+        else:
+            self.n_blockless -= 1
         del self.entries[entry.key]
         if entry.parent != self._root:
             self._children[entry.parent] -= 1
@@ -529,6 +585,7 @@ class BlockPool:
         watermark: int = 0,
         prefix_cache: bool = False,
         cache_namespace: str = "",
+        cache_blockless_cap: int = 256,
     ):
         self.model = model
         self.max_slots = max_slots
@@ -565,7 +622,8 @@ class BlockPool:
         # namespace folds the model config into every chain key so one
         # process serving two models can never cross-hit.
         self.prefix_cache: Optional[PrefixCache] = (
-            PrefixCache(block_size, cache_namespace) if prefix_cache else None
+            PrefixCache(block_size, cache_namespace, cache_blockless_cap)
+            if prefix_cache else None
         )
         self.block_table = np.zeros((max_slots, self.nb_max), np.int32)  # 0 = trash
         self.lengths = np.zeros((max_slots,), np.int32)
@@ -662,15 +720,24 @@ class BlockPool:
     def n_reclaimable_blocks(self) -> int:
         """Cache-retained blocks at refcount 0 — the slack beyond the free
         stack that :meth:`_alloc_blocks` can reclaim by eviction.  Every
-        owner of a cached block also owns its chain ancestors, so a
-        refcount-0 entry's whole subtree is refcount 0 and leaf-first
-        eviction drains exactly this many blocks."""
+        owner of a cached block also owns its chain ancestors (hit binding
+        increfs whole prefixes; re-registration ADOPTS retained dedup
+        targets), so a refcount-0 entry's subtree is normally all
+        refcount 0 and leaf-first eviction drains exactly this many
+        blocks.  One transient exception: two writers racing the same
+        chain can leave a later writer's owned entry under an earlier
+        writer's since-released ancestors — those retained blocks are not
+        evictable until the deeper owner releases, so callers must treat
+        a failed allocation after a passing fit check as recoverable
+        (preempt or degrade), never as an invariant violation.  O(1): the
+        count is maintained incrementally (retention in
+        :meth:`_release_blocks`, resurrection in :meth:`admit_prefix`,
+        adoption in :meth:`PrefixCache.insert_chain`, eviction in
+        :meth:`PrefixCache.evict`) because admission/growth checks read
+        it several times per tick."""
         if self.prefix_cache is None or self.allocator is None:
             return 0
-        return sum(
-            1 for b in self.prefix_cache.by_block
-            if self.allocator.refcount(b) == 0
-        )
+        return self.prefix_cache.retained
 
     @property
     def n_available_blocks(self) -> int:
@@ -803,6 +870,7 @@ class BlockPool:
         self.allocator.free([b for b in zeroed if b not in pc.by_block])
         for b in zeroed:
             if b in pc.by_block:
+                pc.retained += 1  # now reclaimable slack
                 pc._bump(pc.entries[pc.by_block[b]])  # fresh in LRU order
 
     # -- request lifecycle --------------------------------------------------
@@ -841,6 +909,9 @@ class BlockPool:
             # claim the chain FIRST: the private allocation below may evict
             # refcount-0 cache blocks, and it must never reclaim the ones
             # this admission is resurrecting
+            self.prefix_cache.retained -= sum(
+                1 for b in shared if self.allocator.refcount(b) == 0
+            )
             self.allocator.incref(shared)
             need = self.blocks_needed(rows) - len(shared)
             got = self._alloc_blocks(max(need, 0))
@@ -871,6 +942,17 @@ class BlockPool:
             pc.misses += 1
         return fork, entries
 
+    def cancel_prefix_hit(self, fork: int) -> None:
+        """Undo one :meth:`lookup_prefix` hit's telemetry: the admission
+        could not bind the chain (pinning it consumed the very slack the
+        private remainder needed) and degraded to a cold miss."""
+        pc = self.prefix_cache
+        if pc is None:
+            return
+        pc.hits -= 1
+        pc.misses += 1
+        pc.tokens_saved -= fork
+
     def register_prefix(self, slot: int, prompt, upto: int, *,
                         resumable: bool = False, pstats=None,
                         state_rows=None) -> int:
@@ -883,7 +965,8 @@ class BlockPool:
             return 0
         blocks = self._held[slot] if self.has_paged else None
         return pc.insert_chain(prompt, upto, blocks, resumable=resumable,
-                               pstats=pstats, state_rows=state_rows)
+                               pstats=pstats, state_rows=state_rows,
+                               allocator=self.allocator)
 
     def ensure_capacity(self, slot: int, rows: int) -> bool:
         """Allocate-on-boundary: grow ``slot`` to cover ``rows`` KV rows,
@@ -938,7 +1021,9 @@ class BlockPool:
         host = jax.device_get(
             self._swap_gather(self.cache, jnp.asarray(padded, jnp.int32), jnp.int32(slot))
         )
-        live_frac_num, live_frac_den = max(1, len(priv)), len(padded)
+        # len(priv) may be 0 (every block shared): the gather still moves
+        # one padded trash block, but no live bytes — report 0, not 1 block
+        live_frac_num, live_frac_den = len(priv), len(padded)
         nbytes = 0
         for h, pg in zip(jax.tree.leaves(host), jax.tree.leaves(self.paged)):
             nbytes += h.nbytes * live_frac_num // live_frac_den if pg else h.nbytes

@@ -38,6 +38,7 @@ from tests.hypothesis_compat import given, settings, st
 from repro.core import GlassConfig
 from repro.models import ModelConfig, build_model
 from repro.serve.engine import Engine, PagedEngine
+from repro.serve.kv_pool import BlockPool, PrefixCache
 from repro.serve.lifecycle import PreemptionConfig, ReqState
 from repro.serve.scheduler import Request
 
@@ -86,7 +87,8 @@ def _prior_for(cfg: ModelConfig):
 
 
 def _engine(family, *, prefix_cache, max_slots=2, num_blocks=None,
-            preemption=None, spec_k=0, draft_ratio=None, max_len=32):
+            preemption=None, spec_k=0, draft_ratio=None, max_len=32,
+            decode_chunk=8):
     cfg, mode, sel, bsz = _family_setup(family)
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
@@ -96,7 +98,7 @@ def _engine(family, *, prefix_cache, max_slots=2, num_blocks=None,
                       block_size=BS, num_blocks=num_blocks, chunk_tokens=CT,
                       glass=glass, global_prior=_prior_for(cfg),
                       glass_mode=mode, preemption=preemption, spec_k=spec_k,
-                      prefix_cache=prefix_cache)
+                      decode_chunk=decode_chunk, prefix_cache=prefix_cache)
     ref = Engine(model, params, glass=glass, global_prior=_prior_for(cfg),
                  glass_mode=mode)
     return eng, ref
@@ -178,10 +180,15 @@ def _assert_drained_clean(eng):
     for b in cached:
         assert alloc.refcount(b) == 0  # index holds only refcount-0 entries
     assert alloc.n_live == len(cached)
+    # the incremental reclaimable counter agrees with a full index scan
+    assert pool.n_reclaimable_blocks == sum(
+        1 for b in pc.by_block if alloc.refcount(b) == 0
+    ) == len(cached)
     pc.evict_for(alloc, alloc.n_live + 1)
     assert len([e for e in pc.entries.values() if e.block >= 0]) == 0
     assert alloc.n_live == 0
     assert alloc.n_free == pool.num_blocks - 1
+    assert pool.n_reclaimable_blocks == 0
 
 
 # -- warm-vs-cold bit-identity across families --------------------------------
@@ -426,6 +433,137 @@ def test_cache_eviction_under_block_pressure():
         np.testing.assert_array_equal(want, d[uid].tokens)
     # whatever survives is still internally consistent
     _assert_drained_clean(eng)
+
+
+def test_admit_prefix_degrades_cleanly_when_chain_is_the_only_slack():
+    """``admit_prefix`` pins the hit chain before allocating the private
+    remainder; when the chain was the pool's only reclaimable slack that
+    allocation must fail all-or-nothing: None back, every refcount, the
+    retained counter, and the free-slot stack exactly restored — and a
+    cold admission of the first-chunk footprint must then succeed by
+    evicting the unpinnable chain."""
+    model = build_model(DENSE)
+    pool = BlockPool(model, max_slots=3, max_len=32, block_size=4,
+                     num_blocks=7, prefix_cache=True)
+    prompt = _prompt(20, seed=81)
+    s0 = pool.admit(16)
+    pool.lengths[s0] = 16
+    pool.register_prefix(s0, prompt, 16, resumable=True)
+    s1 = pool.admit(8)  # blocker: consumes the remaining free blocks
+    assert pool.n_free_blocks == 0
+    pool.free(s0)  # chain retained at refcount 0: the only slack
+    assert pool.n_reclaimable_blocks == 4
+    fork, entries = pool.lookup_prefix(prompt, CT)
+    assert fork == 16 and len(entries) == 4
+    free_slots = list(pool._free_slots)
+    assert pool.admit_prefix(20, entries) is None
+    assert pool.n_reclaimable_blocks == 4  # references dropped back
+    for e in entries:
+        assert pool.allocator.refcount(e.block) == 0
+    assert pool._free_slots == free_slots and pool.n_free_blocks == 0
+    pool.cancel_prefix_hit(fork)
+    pc = pool.prefix_cache
+    assert pc.hits == 0 and pc.misses == 1 and pc.tokens_saved == 0
+    s2 = pool.admit(4)  # cold path: eviction reclaims the chain
+    assert s2 is not None and pc.evictions >= 1
+    pool.free(s2)
+    pool.free(s1)
+
+
+def test_warm_admission_falls_back_cold_under_pin_pressure():
+    """Engine regression: a cache hit whose chain is the pool's only
+    reclaimable slack used to crash the admission tick (``admit_prefix``
+    -> None -> assert).  The engine must instead degrade that admission
+    to a cold prefill — evicting the unpinnable chain under its own
+    allocation — with telemetry canceled back to a miss and streams still
+    reference-identical."""
+    eng, ref = _engine(family="dense", prefix_cache=True, max_slots=2,
+                       num_blocks=8, max_len=32, decode_chunk=1)
+    pa = _prompt(16, seed=91)
+    pd = _prompt(8, seed=92)
+    pw = np.concatenate([pa, _prompt(4, seed=93)])
+    done = dict(eng.run([Request(uid=1, prompt=pa, max_new=1)]))
+    assert eng.pool.n_reclaimable_blocks == 4  # uid 1's chain is retained
+    # drive an unrelated request until it drains the free stack to zero
+    # while the chain is the entire remaining (reclaimable) supply
+    eng.submit(Request(uid=2, prompt=pd, max_new=6))
+    for _ in range(100):
+        eng.step()
+        e2 = eng.lc.entries.get(2)
+        if (e2 is not None and e2.state is ReqState.RUNNING
+                and eng.pool.n_free_blocks == 0):
+            break
+    else:
+        raise AssertionError("never reached the zero-free pressure window")
+    eng.submit(Request(uid=3, prompt=pw, max_new=2))
+    eng.step()  # admission tick: warm bind fails, cold fallback admits
+    e3 = eng.lc.entries[3]
+    assert e3.slot >= 0 and e3.cached_rows == 0  # admitted, cold
+    pc = eng.pool.prefix_cache
+    assert pc.hits == 0  # the unbindable hit was canceled back to a miss
+    done.update(eng.run())
+    for uid, p, n in [(1, pa, 1), (2, pd, 6), (3, pw, 2)]:
+        want = ref.generate(jnp.asarray(p)[None], n).tokens[0]
+        np.testing.assert_array_equal(want, done[uid].tokens, err_msg=f"uid={uid}")
+    _assert_drained_clean(eng)
+
+
+def test_blockless_cap_evicts_lru_leaves_first():
+    """Unit: block-less chains (pure-state families) are capped by LRU
+    leaf-first eviction at insert time — the oldest chain goes, the
+    newest survives whole."""
+    pc = PrefixCache(4, max_blockless=4)
+    a, b, c = (np.arange(s, s + 8, dtype=np.int32) for s in (0, 8, 16))
+    pc.insert_chain(a, 8, None, resumable=True)  # 2 entries
+    pc.insert_chain(b, 8, None, resumable=True)  # 4 entries: at cap
+    assert len(pc.entries) == 4
+    pc.insert_chain(c, 8, None, resumable=True)  # 6 -> evict chain a
+    assert len(pc.entries) == 4 and pc.evictions == 2
+    ext = lambda p: np.concatenate([p, np.zeros(2, np.int32)])
+    assert pc.lookup(ext(a), 4)[0] == 0  # evicted: clean miss
+    assert pc.lookup(ext(b), 4)[0] == 8  # survivors intact
+    assert pc.lookup(ext(c), 4)[0] == 8
+
+
+def test_blockless_cache_is_bounded_for_pure_state_family():
+    """rwkv6 regression: block-less entries carry full state-row resume
+    snapshots and see no allocation pressure (no paged blocks), so
+    without a cap a stream of distinct prompts would grow device memory
+    without bound.  The cap holds, and post-eviction lookups still serve
+    bit-identical streams."""
+    eng, ref = _engine(family="rwkv6", prefix_cache=True)
+    eng.pool.prefix_cache.max_blockless = 5
+    prompts = [_prompt(12, seed=100 + i) for i in range(8)]
+    for i, p in enumerate(prompts):
+        eng.run([Request(uid=i, prompt=p, max_new=2)])
+    pc = eng.pool.prefix_cache
+    assert len(pc.entries) <= 5 and pc.evictions >= 1
+    # an evicted-chain prompt degrades to a shallower hit or miss, never
+    # to wrong state
+    done = eng.run([Request(uid=99, prompt=prompts[0], max_new=2)])
+    want = ref.generate(jnp.asarray(prompts[0])[None], 2).tokens[0]
+    np.testing.assert_array_equal(want, done[99].tokens)
+    _assert_drained_clean(eng)
+
+
+def test_swap_out_all_shared_reports_zero_paged_bytes():
+    """Telemetry regression: a request whose every block is
+    cache-registered swaps out zero private blocks, and the padded
+    trash-block gather must not be booked as live bytes moved."""
+    model = build_model(DENSE)
+    pool = BlockPool(model, max_slots=2, max_len=32, block_size=4,
+                     num_blocks=7, prefix_cache=True)
+    prompt = _prompt(8, seed=71)
+    slot = pool.admit(8)
+    pool.lengths[slot] = 8
+    pool.register_prefix(slot, prompt, 8, resumable=True)
+    sw = pool.swap_out(slot)
+    assert sw.n_blocks == 0 and len(sw.kept) == 2
+    assert sw.nbytes == 0  # dense family: every cache leaf is paged
+    s2 = pool.swap_in(sw)
+    assert s2 is not None and pool.held_blocks(s2) == 2
+    assert int(pool.lengths[s2]) == 8
+    pool.free(s2)
 
 
 # -- pool-leak regression over randomized shared-prefix workloads -------------
