@@ -1,3 +1,3 @@
-from .ops import flash_attention, glass_ffn, local_stats
+from .ops import flash_attention, glass_ffn, local_stats, paged_attention
 
-__all__ = ["flash_attention", "glass_ffn", "local_stats"]
+__all__ = ["flash_attention", "glass_ffn", "local_stats", "paged_attention"]

@@ -13,6 +13,15 @@ HBM->VMEM — inactive blocks are never read, which is exactly the paper's
 Grid: one step per active block; the f32 accumulator lives in the output ref
 (TPU grids execute sequentially, so revisiting the output block is safe).
 
+``block_scale`` is the per-request density hook: each listed block's
+contribution is multiplied by a per-(row, tile) f32 before accumulation.
+The engine selects blocks at its CAPACITY density and scales a lower-density
+request's dropped tiles by exactly 0.0 — a zero contribution added to the
+accumulator is bitwise a no-op, so a scaled row equals running the shorter
+list outright, while every row still shares one fixed-width compiled grid.
+(The tiles are still streamed; per-request density trades I/O for not
+recompiling per request.  ``None`` keeps the original unscaled program.)
+
 VMEM budget per step (worst assigned case d = 8192, bs = 128, B <= 128):
 x 2 MiB + 3 weight tiles 6 MiB + acc 4 MiB ~= 12 MiB < 16 MiB.
 """
@@ -34,6 +43,18 @@ _ACTS: dict[str, Callable] = {
 }
 
 
+def _tile_contrib(x, wg_ref, wu_ref, wd_ref, *, act: str, gated: bool):
+    up = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+    if gated:
+        gate = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+        h = _ACTS[act](gate) * up
+    else:
+        h = _ACTS[act](up)
+    return jnp.dot(
+        h.astype(wd_ref.dtype), wd_ref[...], preferred_element_type=jnp.float32
+    )
+
+
 def _kernel(idx_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref, *, act: str, gated: bool):
     i = pl.program_id(0)
 
@@ -41,15 +62,20 @@ def _kernel(idx_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref, *, act: str, gated: b
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    x = x_ref[...]
-    up = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
-    if gated:
-        gate = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
-        h = _ACTS[act](gate) * up
-    else:
-        h = _ACTS[act](up)
-    o_ref[...] += jnp.dot(
-        h.astype(wd_ref.dtype), wd_ref[...], preferred_element_type=jnp.float32
+    o_ref[...] += _tile_contrib(x_ref[...], wg_ref, wu_ref, wd_ref, act=act, gated=gated)
+
+
+def _kernel_scaled(
+    idx_ref, x_ref, sc_ref, wg_ref, wu_ref, wd_ref, o_ref, *, act: str, gated: bool
+):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += sc_ref[0, i] * _tile_contrib(
+        x_ref[...], wg_ref, wu_ref, wd_ref, act=act, gated=gated
     )
 
 
@@ -60,6 +86,7 @@ def glass_ffn_block_sparse(
     block_idx: jax.Array,  # (nb_active,) int32 — active block ids
     w_gate: jax.Array | None = None,  # (d, m)
     *,
+    block_scale: jax.Array | None = None,  # (nb_active,) f32 tile multipliers
     act: str = "silu",
     block_size: int = 128,
     interpret: bool = False,
@@ -73,24 +100,38 @@ def glass_ffn_block_sparse(
     if not gated:  # dummy ref so the kernel signature stays uniform
         w_gate = w_up
 
+    weight_specs = [
+        pl.BlockSpec((d, block_size), lambda i, idx: (0, idx[i])),  # w_gate tile
+        pl.BlockSpec((d, block_size), lambda i, idx: (0, idx[i])),  # w_up tile
+        pl.BlockSpec((block_size, d), lambda i, idx: (idx[i], 0)),  # w_down tile
+    ]
+    x_spec = pl.BlockSpec((B, d), lambda i, idx: (0, 0))  # x: resident
+    out_spec = pl.BlockSpec((B, d), lambda i, idx: (0, 0))
+    if block_scale is None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=(nb,),
+            in_specs=[x_spec] + weight_specs, out_specs=out_spec,
+        )
+        fn = pl.pallas_call(
+            functools.partial(_kernel, act=act, gated=gated),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((B, d), jnp.float32),
+            interpret=interpret,
+        )
+        return fn(block_idx, x, w_gate, w_up, w_down)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(nb,),
-        in_specs=[
-            pl.BlockSpec((B, d), lambda i, idx: (0, 0)),  # x: resident
-            pl.BlockSpec((d, block_size), lambda i, idx: (0, idx[i])),  # w_gate tile
-            pl.BlockSpec((d, block_size), lambda i, idx: (0, idx[i])),  # w_up tile
-            pl.BlockSpec((block_size, d), lambda i, idx: (idx[i], 0)),  # w_down tile
-        ],
-        out_specs=pl.BlockSpec((B, d), lambda i, idx: (0, 0)),
+        num_scalar_prefetch=1, grid=(nb,),
+        in_specs=[x_spec, pl.BlockSpec((1, nb), lambda i, idx: (0, 0))] + weight_specs,
+        out_specs=out_spec,
     )
     fn = pl.pallas_call(
-        functools.partial(_kernel, act=act, gated=gated),
+        functools.partial(_kernel_scaled, act=act, gated=gated),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, d), jnp.float32),
         interpret=interpret,
     )
-    return fn(block_idx, x, w_gate, w_up, w_down)
+    sc = jnp.asarray(block_scale, jnp.float32).reshape(1, nb)
+    return fn(block_idx, x, sc, w_gate, w_up, w_down)
 
 
 def _kernel_rowwise(idx_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref, *, act: str, gated: bool):
@@ -100,15 +141,20 @@ def _kernel_rowwise(idx_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref, *, act: str, 
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    x = x_ref[...]
-    up = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
-    if gated:
-        gate = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
-        h = _ACTS[act](gate) * up
-    else:
-        h = _ACTS[act](up)
-    o_ref[...] += jnp.dot(
-        h.astype(wd_ref.dtype), wd_ref[...], preferred_element_type=jnp.float32
+    o_ref[...] += _tile_contrib(x_ref[...], wg_ref, wu_ref, wd_ref, act=act, gated=gated)
+
+
+def _kernel_rowwise_scaled(
+    idx_ref, x_ref, sc_ref, wg_ref, wu_ref, wd_ref, o_ref, *, act: str, gated: bool
+):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += sc_ref[0, i] * _tile_contrib(
+        x_ref[...], wg_ref, wu_ref, wd_ref, act=act, gated=gated
     )
 
 
@@ -119,6 +165,7 @@ def glass_ffn_block_sparse_rowwise(
     block_idx: jax.Array,  # (B, nb_active) int32 — per-row active block ids
     w_gate: jax.Array | None = None,  # (d, m)
     *,
+    block_scale: jax.Array | None = None,  # (B, nb_active) f32 tile multipliers
     act: str = "silu",
     block_size: int = 128,
     interpret: bool = False,
@@ -131,7 +178,9 @@ def glass_ffn_block_sparse_rowwise(
     output block (consecutive grid steps revisit it, which is safe on TPU's
     sequential grid).  Rows are processed independently — batching rows that
     share a block list into the shared-list kernel is a further optimization
-    the engine can apply when masks collide.  Returns (B, d) f32.
+    the engine can apply when masks collide.  ``block_scale`` multiplies row
+    b's i-th tile contribution (per-request GLASS density nested inside the
+    capacity-tier list; 0.0 exactly drops a tile).  Returns (B, d) f32.
     """
     B, d = x.shape
     m = w_up.shape[1]
@@ -142,21 +191,36 @@ def glass_ffn_block_sparse_rowwise(
     if not gated:  # dummy ref so the kernel signature stays uniform
         w_gate = w_up
 
+    weight_specs = [
+        pl.BlockSpec((d, block_size), lambda b, i, idx: (0, idx[b, i])),  # w_gate tile
+        pl.BlockSpec((d, block_size), lambda b, i, idx: (0, idx[b, i])),  # w_up tile
+        pl.BlockSpec((block_size, d), lambda b, i, idx: (idx[b, i], 0)),  # w_down tile
+    ]
+    x_spec = pl.BlockSpec((1, d), lambda b, i, idx: (b, 0))  # x: row b resident
+    out_spec = pl.BlockSpec((1, d), lambda b, i, idx: (b, 0))
+    if block_scale is None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=(B, nb),
+            in_specs=[x_spec] + weight_specs, out_specs=out_spec,
+        )
+        fn = pl.pallas_call(
+            functools.partial(_kernel_rowwise, act=act, gated=gated),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((B, d), jnp.float32),
+            interpret=interpret,
+        )
+        return fn(block_idx, x, w_gate, w_up, w_down)
+    assert block_scale.shape == block_idx.shape, (block_scale.shape, block_idx.shape)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(B, nb),
-        in_specs=[
-            pl.BlockSpec((1, d), lambda b, i, idx: (b, 0)),  # x: row b resident
-            pl.BlockSpec((d, block_size), lambda b, i, idx: (0, idx[b, i])),  # w_gate tile
-            pl.BlockSpec((d, block_size), lambda b, i, idx: (0, idx[b, i])),  # w_up tile
-            pl.BlockSpec((block_size, d), lambda b, i, idx: (idx[b, i], 0)),  # w_down tile
-        ],
-        out_specs=pl.BlockSpec((1, d), lambda b, i, idx: (b, 0)),
+        num_scalar_prefetch=1, grid=(B, nb),
+        in_specs=[x_spec, pl.BlockSpec((1, nb), lambda b, i, idx: (b, 0))] + weight_specs,
+        out_specs=out_spec,
     )
     fn = pl.pallas_call(
-        functools.partial(_kernel_rowwise, act=act, gated=gated),
+        functools.partial(_kernel_rowwise_scaled, act=act, gated=gated),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, d), jnp.float32),
         interpret=interpret,
     )
-    return fn(block_idx, x, w_gate, w_up, w_down)
+    sc = jnp.asarray(block_scale, jnp.float32)
+    return fn(block_idx, x, sc, w_gate, w_up, w_down)

@@ -16,30 +16,37 @@ from .flash_attention import flash_attention as _flash
 from .glass_ffn import glass_ffn_block_sparse as _glass_ffn
 from .glass_ffn import glass_ffn_block_sparse_rowwise as _glass_ffn_rowwise
 from .local_stats import local_stats as _local_stats
+from .paged_attention import paged_attention as _paged_attention
 
 INTERPRET = jax.default_backend() == "cpu"
 
 
 @partial(jax.jit, static_argnames=("act", "block_size", "interpret"))
 def glass_ffn(
-    x, w_up, w_down, block_idx, w_gate=None, *, act="silu", block_size=128, interpret=None
+    x, w_up, w_down, block_idx, w_gate=None, *, block_scale=None, act="silu",
+    block_size=128, interpret=None,
 ):
     """Block-sparse GLASS FFN decode step: only active weight blocks are read."""
     it = INTERPRET if interpret is None else interpret
     return _glass_ffn(
-        x, w_up, w_down, block_idx, w_gate, act=act, block_size=block_size, interpret=it
+        x, w_up, w_down, block_idx, w_gate, block_scale=block_scale,
+        act=act, block_size=block_size, interpret=it,
     )
 
 
 @partial(jax.jit, static_argnames=("act", "block_size", "interpret"))
 def glass_ffn_rowwise(
-    x, w_up, w_down, block_idx, w_gate=None, *, act="silu", block_size=128, interpret=None
+    x, w_up, w_down, block_idx, w_gate=None, *, block_scale=None, act="silu",
+    block_size=128, interpret=None,
 ):
     """Per-row block-sparse GLASS FFN: block_idx (B, nb) — one prompt-adaptive
-    block list per serving slot (the continuous-batching decode path)."""
+    block list per serving slot (the continuous-batching decode path).
+    ``block_scale`` (B, nb) multiplies each row's tile contributions (the
+    per-request density hook)."""
     it = INTERPRET if interpret is None else interpret
     return _glass_ffn_rowwise(
-        x, w_up, w_down, block_idx, w_gate, act=act, block_size=block_size, interpret=it
+        x, w_up, w_down, block_idx, w_gate, block_scale=block_scale,
+        act=act, block_size=block_size, interpret=it,
     )
 
 
@@ -55,6 +62,21 @@ def flash_attention(
     return _flash(
         q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
         block_q=block_q, block_k=block_k, interpret=it,
+    )
+
+
+@partial(jax.jit, static_argnames=("softcap", "scale", "interpret"))
+def paged_attention(
+    q, cache_k, cache_v, block_table, cache_len, window, *,
+    softcap=None, scale=None, interpret=None,
+):
+    """Fused paged-attention decode: block-table gather + online-softmax
+    attention in one pass — the caller scatters the new k/v rows first.
+    ``window`` is a traced int32 scalar (pass 2**30 for global layers)."""
+    it = INTERPRET if interpret is None else interpret
+    return _paged_attention(
+        q, cache_k, cache_v, block_table, cache_len, window,
+        softcap=softcap, scale=scale, interpret=it,
     )
 
 

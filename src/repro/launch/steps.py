@@ -145,21 +145,25 @@ def make_glass_prefill(
 # ---------------------------------------------------------------------------
 
 
-def make_decode_step(model: Model, greedy: bool = True):
+def make_decode_step(model: Model, greedy: bool = True, attn_mode: str = "gather"):
     """decode(params, cache, token, cache_len) -> (next_token, cache).
 
     For GLASS steady-state decode, pass params whose FFN weights are the
-    compact ones (built by glass-prefill) — the step code is identical."""
+    compact ones (built by glass-prefill) — the step code is identical.
+    ``attn_mode="paged_pallas"`` runs the fused paged-attention kernel on
+    the paged cache layout instead of the XLA gather reference."""
 
     def decode(params, cache, token, cache_len):
-        logits, cache = model.decode_step(params, token, cache, cache_len)
+        logits, cache = model.decode_step(
+            params, token, cache, cache_len, attn_mode=attn_mode
+        )
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         return nxt, cache
 
     return decode
 
 
-def make_decode_step_sampled(model: Model):
+def make_decode_step_sampled(model: Model, attn_mode: str = "gather"):
     """Per-slot sampled decode with the counter-based positional PRNG —
     the jittable program behind the per-request ``SamplingParams`` API.
 
@@ -177,7 +181,9 @@ def make_decode_step_sampled(model: Model):
 
     def decode(params, cache, token, cache_len, seeds, pos, temperature,
                top_k, greedy_mask, top_p=None, min_p=None):
-        logits, cache = model.decode_step(params, token, cache, cache_len)
+        logits, cache = model.decode_step(
+            params, token, cache, cache_len, attn_mode=attn_mode
+        )
         lg = logits[:, -1].astype(jnp.float32)
         g = jnp.argmax(lg, axis=-1).astype(jnp.int32)
         s = sample_positional(lg, seeds, pos, temperature, top_k,
@@ -188,19 +194,23 @@ def make_decode_step_sampled(model: Model):
     return decode
 
 
-def make_decode_step_masked(model: Model):
+def make_decode_step_masked(model: Model, attn_mode: str = "gather"):
     """Masked decode (no compaction): GLASS as a multiplier mask — the jnp
     reference for the block-sparse kernel path."""
 
     def decode(params, cache, token, cache_len, ffn_masks):
-        logits, cache = model.decode_step(params, token, cache, cache_len, ffn_masks=ffn_masks)
+        logits, cache = model.decode_step(
+            params, token, cache, cache_len, ffn_masks=ffn_masks,
+            attn_mode=attn_mode,
+        )
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         return nxt, cache
 
     return decode
 
 
-def make_decode_step_block_sparse(model: Model, block_size: int, groups=None):
+def make_decode_step_block_sparse(model: Model, block_size: int, groups=None,
+                                  attn_mode: str = "gather"):
     """Block-sparse decode: per-request active FFN block ids (from
     ``GlassConfig(selection="block")``) feed the pallas ``glass_ffn`` kernel
     directly — weights stay resident, only active (d x block_size) tiles are
@@ -219,6 +229,7 @@ def make_decode_step_block_sparse(model: Model, block_size: int, groups=None):
             logits, cache = model.decode_step(
                 params, token, cache, cache_len,
                 ffn_block_idx=block_idx, ffn_block_size=block_size,
+                attn_mode=attn_mode,
             )
             nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
             return nxt, cache
@@ -230,6 +241,7 @@ def make_decode_step_block_sparse(model: Model, block_size: int, groups=None):
             params, token, cache, cache_len,
             ffn_block_idx=block_idx, ffn_block_size=block_size,
             ffn_groups=tuple(groups), ffn_row_perm=row_perm,
+            attn_mode=attn_mode,
         )
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         return nxt, cache
@@ -238,7 +250,8 @@ def make_decode_step_block_sparse(model: Model, block_size: int, groups=None):
 
 
 def make_verify_step(model: Model, glass_mode: Optional[str] = None,
-                     block_size: int = 128):
+                     block_size: int = 128, parallel: bool = False,
+                     attn_mode: str = "gather"):
     """Speculative-verify step builder: the TARGET tier checks all ``T``
     candidate positions of a draft in one jittable program.
 
@@ -251,18 +264,23 @@ def make_verify_step(model: Model, glass_mode: Optional[str] = None,
     ``"block_sparse"`` takes active FFN block ids.  The DRAFT pass needs no
     new builder — the existing decode-step builders accept the draft
     tier's rows/masks unchanged (tiers share every layout, only ``k``
-    differs)."""
+    differs).
+
+    ``parallel=True`` lowers the one-forward T-position verify (attention
+    families only — see :meth:`Model.verify_steps`); the verdicts and KV
+    rows stay BIT-identical to the sequential scan."""
     if glass_mode not in (None, "masked", "compact", "block_sparse"):
         raise ValueError(glass_mode)
+    common = dict(parallel=parallel, attn_mode=attn_mode)
 
     if glass_mode is None:
         def verify(params, cache, tokens, cache_len):
-            return model.verify_steps(params, tokens, cache, cache_len)
+            return model.verify_steps(params, tokens, cache, cache_len, **common)
 
         return verify
 
     def verify_tiered(params, cache, tokens, cache_len, tier):
-        kw = {}
+        kw = dict(common)
         if glass_mode == "masked":
             kw["ffn_masks"] = tier
         elif glass_mode == "compact":
@@ -275,7 +293,8 @@ def make_verify_step(model: Model, glass_mode: Optional[str] = None,
     return verify_tiered
 
 
-def make_chunked_prefill(model: Model, chunk_tokens: int):
+def make_chunked_prefill(model: Model, chunk_tokens: int,
+                         attn_mode: str = "gather"):
     """Chunked-prefill step for the paged serving path: processes up to
     ``chunk_tokens`` prompt tokens against a paged cache + block table,
     returning merged-by-addition GLASS chunk stats (see
@@ -285,13 +304,15 @@ def make_chunked_prefill(model: Model, chunk_tokens: int):
     def prefill_chunk(params, tokens, cache, cache_len, block_table):
         assert tokens.shape[1] <= chunk_tokens, (tokens.shape, chunk_tokens)
         return model.prefill_chunk(
-            params, tokens, cache, cache_len, block_table=block_table
+            params, tokens, cache, cache_len, block_table=block_table,
+            attn_mode=attn_mode,
         )
 
     return prefill_chunk
 
 
-def make_resumed_prefill(model: Model, chunk_tokens: int):
+def make_resumed_prefill(model: Model, chunk_tokens: int,
+                         attn_mode: str = "gather"):
     """Prefix-cache warm prefill: one chunk that CONTINUES a cached
     prefix's GLASS stat fold instead of starting a fresh one.
 
@@ -309,7 +330,8 @@ def make_resumed_prefill(model: Model, chunk_tokens: int):
                         carry_stats):
         assert tokens.shape[1] <= chunk_tokens, (tokens.shape, chunk_tokens)
         logits, cache, stats = model.prefill_chunk(
-            params, tokens, cache, cache_len, block_table=block_table
+            params, tokens, cache, cache_len, block_table=block_table,
+            attn_mode=attn_mode,
         )
         return logits, cache, merge_stat_sums(carry_stats, stats)
 

@@ -99,6 +99,7 @@ class Model:
         cache_len: jax.Array,  # (B,) int32 tokens already processed
         *,
         block_table=None,  # (B, nb) int32; None for pure-state families (ssm)
+        attn_mode: str = "gather",  # "paged_pallas" = fused paged-attention kernel
     ):
         """Incremental prefill: extend the cache by T prompt tokens.
 
@@ -112,16 +113,19 @@ class Model:
             return transformer.rwkv_prefill_chunk(params, tokens, cfg, cache)
         if cfg.family == "hybrid":
             return transformer.hybrid_prefill_chunk(
-                params, tokens, cfg, cache, block_table, cache_len
+                params, tokens, cfg, cache, block_table, cache_len,
+                attn_mode=attn_mode,
             )
         return transformer.dense_prefill_chunk(
-            params, tokens, cfg, cache, block_table, cache_len
+            params, tokens, cfg, cache, block_table, cache_len,
+            attn_mode=attn_mode,
         )
 
     def decode_step(
         self,
         params,
-        token: jax.Array,  # (B, 1)
+        token: jax.Array,  # (B, 1); dense families accept (B, T) for the
+        # parallel multi-token verify / forced replay
         cache,
         cache_len: jax.Array,  # scalar, or (B,) per-slot lengths (continuous batching)
         *,
@@ -130,9 +134,11 @@ class Model:
         block_table=None,  # (B, nb) int32: paged-KV serving (BlockPool)
         ffn_block_idx=None,  # active FFN block ids -> block-sparse pallas kernel
         ffn_block_size: int = 128,
+        ffn_block_scale=None,  # per-(row, tile) f32 multipliers (per-request density)
         ffn_groups=None,  # static tuple: rows sharing a block list, batched
         # through the shared-list kernel (see dense_decode_step)
         ffn_row_perm=None,  # (B,) int32 row permutation matching ffn_groups
+        attn_mode: str = "gather",  # "paged_pallas" = fused paged-attention kernel
     ):
         cfg = self.cfg
         if ffn_block_idx is not None and cfg.family not in ("dense", "vlm"):
@@ -157,12 +163,15 @@ class Model:
             return transformer.hybrid_decode_step(
                 params, token, cache, cache_len, cfg, shared_mask=mask,
                 shared_compact=compact_layers, block_table=block_table,
+                attn_mode=attn_mode,
             )
         return transformer.dense_decode_step(
             params, token, cache, cache_len, cfg, ffn_masks=ffn_masks,
             compact_layers=compact_layers, block_table=block_table,
             ffn_block_idx=ffn_block_idx, ffn_block_size=ffn_block_size,
+            ffn_block_scale=ffn_block_scale,
             ffn_groups=ffn_groups, ffn_row_perm=ffn_row_perm,
+            attn_mode=attn_mode,
         )
 
     def verify_steps(
@@ -177,26 +186,40 @@ class Model:
         block_table=None,
         ffn_block_idx=None,
         ffn_block_size: int = 128,
+        ffn_block_scale=None,  # per-(row, tile) f32 multipliers (per-request density)
         seeds=None,  # (B,) int32: per-slot sampling seeds -> sampled verdicts
         pos0=None,  # (B,) int32 generated position of the FIRST verdict
         temperature=None,  # (B,) f32
         top_k=None,  # (B,) int32
         greedy_mask=None,  # (B,) bool: rows that verdict by argmax regardless
+        parallel: bool = False,  # ONE T-token forward instead of the scan
+        attn_mode: str = "gather",
     ):
         """Multi-token verification: feed ``tokens[:, j]`` sequentially
-        through :meth:`decode_step` inside ONE ``lax.scan``, returning each
-        position's verdict token and the advanced cache.
+        through :meth:`decode_step` inside ONE jitted program (unrolled —
+        see the loop comment below for why not ``lax.scan``), returning
+        each position's verdict token and the advanced cache.
 
         This is the model-level primitive behind self-speculative decoding:
         feed ``[pending, d_1 .. d_k]`` under the TARGET tier's masks and
         read the verdict ``t_j`` at every position (accept the longest
-        prefix with ``d_{j+1} == t_j``).  It scans the SAME single-token
+        prefix with ``d_{j+1} == t_j``).  It runs the SAME single-token
         decode body the serving engines run, so KV rows, recurrent state,
         and logits are BIT-identical to ``T`` individual decode steps — the
         property the speculative state-invariant suite relies on for exact
-        rollback.  A parallel multi-token verify kernel (one forward over
-        all T positions) is the TPU follow-up and must preserve that
-        bit-equality.
+        rollback.
+
+        ``parallel=True`` is the one-forward path over all T positions that
+        the sequential scan deferred: every feed is already known (they are
+        all forced), so attention-backed families run ONE ``decode_step``
+        with ``tokens (B, T)`` and the causal intra-chunk mask, and read a
+        verdict per position.  The paged-pallas kernel keeps each query's
+        op graph identical to a T = 1 tick (query axis on the kernel grid),
+        so KV rows and verdicts stay BIT-identical to the scan — the
+        state-invariant suite asserts it.  Recurrent families (ssm /
+        hybrid) refuse: a chunkwise-parallel state update is a different
+        reduction order than T sequential updates, which would break exact
+        rollback.
 
         The verdict is the greedy argmax by default.  With ``seeds``/
         ``pos0``/``temperature``/``top_k`` given, it is the **counter-based
@@ -212,7 +235,8 @@ class Model:
         kw = dict(
             ffn_masks=ffn_masks, compact_layers=compact_layers,
             block_table=block_table, ffn_block_idx=ffn_block_idx,
-            ffn_block_size=ffn_block_size,
+            ffn_block_size=ffn_block_size, ffn_block_scale=ffn_block_scale,
+            attn_mode=attn_mode,
         )
         cache_len = jnp.asarray(cache_len, jnp.int32)
         sampled = seeds is not None
@@ -223,21 +247,46 @@ class Model:
             if greedy_mask is None:
                 greedy_mask = jnp.zeros(seeds.shape, bool)
 
-        def body(carry, xs):
-            cache, clen, j = carry
-            tok = xs
-            logits, cache = self.decode_step(params, tok[:, None], cache, clen, **kw)
+        if parallel:
+            if self.cfg.family not in ("dense", "moe", "vlm"):
+                raise NotImplementedError(
+                    "parallel verify targets attention-backed families; "
+                    "recurrent state must advance token-by-token to stay "
+                    "bit-identical to sequential decode"
+                )
+            logits, cache = self.decode_step(params, tokens, cache, cache_len, **kw)
+            lg = logits.astype(jnp.float32)  # (B, T, V)
+            g = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            if sampled:
+                B, T = tokens.shape
+                pos = pos0[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+                rep = lambda a: jnp.repeat(a, T, axis=0)
+                s = sample_positional(
+                    lg.reshape(B * T, -1), rep(seeds), pos.reshape(-1),
+                    rep(temperature), rep(top_k),
+                ).reshape(B, T)
+                g = jnp.where(greedy_mask[:, None], g, s)
+            return g, cache
+
+        # UNROLLED python loop, not lax.scan: XLA fuses a while-loop body
+        # differently than the same ops inlined, and the two disagree at
+        # the last ulp deep in the layer stack — which would break the
+        # bit-equality contract between this path and ``parallel=True``
+        # (and between this path and T individual decode_step programs).
+        # T = spec_k + 1 stays small, so the unroll cost is bounded.
+        verdicts = []
+        for j in range(tokens.shape[1]):
+            logits, cache = self.decode_step(
+                params, tokens[:, j:j + 1], cache, cache_len, **kw
+            )
+            cache_len = cache_len + 1
             lg = logits[:, -1].astype(jnp.float32)
             g = jnp.argmax(lg, axis=-1).astype(jnp.int32)
             if sampled:
                 s = sample_positional(lg, seeds, pos0 + j, temperature, top_k)
                 g = jnp.where(greedy_mask, g, s)
-            return (cache, clen + 1, j + 1), g
-
-        (cache, _, _), verdicts = jax.lax.scan(
-            body, (cache, cache_len, jnp.int32(0)), jnp.swapaxes(tokens, 0, 1)
-        )
-        return jnp.swapaxes(verdicts, 0, 1), cache
+            verdicts.append(g)
+        return jnp.stack(verdicts, axis=1), cache
 
     def init_cache(self, batch: int, max_len: int):
         cfg = self.cfg

@@ -264,6 +264,7 @@ def attention_decode_paged(
     block_table: jax.Array,  # (B, nb) int32 block ids in logical order
     cache_len: jax.Array,  # (B,) int32 tokens already in each row's blocks
     window=None,
+    attn_mode: str = "gather",
 ):
     """Decode/chunk-prefill attention through a paged KV block table.
 
@@ -276,6 +277,14 @@ def attention_decode_paged(
     rows in :func:`attention_decode`.  Rows that must stay inert (free /
     mid-prefill slots of the fixed decode batch) point their table at the
     reserved trash block 0 and carry ``cache_len = 0``.
+
+    ``attn_mode="paged_pallas"`` replaces the gather + dense softmax with
+    the fused Pallas kernel (:mod:`repro.kernels.paged_attention`): the
+    scatter stays out here (the kernel must never write blocks the table
+    does not reference), the gather disappears, and per-row HBM traffic
+    scales with live blocks instead of the ``nb`` bucket.  The gather path
+    stays as the reference / fallback; both paths agree to allclose (the
+    online softmax is a different summation order, so not bitwise).
     """
     B, T, _ = x.shape
     nb, bs = block_table.shape[1], cache_k.shape[1]
@@ -287,6 +296,13 @@ def attention_decode_paged(
     else:
         rp = pos
     q, k = _rope_qk(q, k, cfg, rp)
+    # Pin the to-be-scattered values: without the barrier XLA duplicates the
+    # rope chain (one copy feeds the scatter, one the attention dot) and may
+    # fuse the copies differently (FMA vs mul+add) — and differently again
+    # between a scan body and the same step inlined.  The stored bits then
+    # depend on which program wrote them, breaking the bit-exact equivalence
+    # between the sequential verify scan and the T = k+1 parallel verify.
+    q, k, v = jax.lax.optimization_barrier((q, k, v))
     q = constrain(q, "decode_q")
     if q.ndim == 4:
         # repeated layout: regroup to (B,T,K,G,hd) — see attention_decode
@@ -296,6 +312,18 @@ def attention_decode_paged(
     offs = pos % bs
     cache_k = constrain(cache_k.at[pages, offs].set(k), "decode_cache")
     cache_v = constrain(cache_v.at[pages, offs].set(v), "decode_cache")
+    if attn_mode == "paged_pallas":
+        from ..kernels.ops import paged_attention
+
+        wnd = jnp.int32(2**30) if window is None else jnp.asarray(window, jnp.int32)
+        out = paged_attention(
+            q, cache_k, cache_v, block_table, cache_len, wnd,
+            softcap=cfg.attn_softcap, scale=cfg.head_dim**-0.5,
+        )
+        y = out.reshape(B, T, cfg.attn_dim) @ p["wo"]
+        return y, cache_k, cache_v
+    if attn_mode != "gather":
+        raise ValueError(f"unknown attn_mode {attn_mode!r}")
     kg = cache_k[block_table].reshape(B, nb * bs, *cache_k.shape[2:])
     vg = cache_v[block_table].reshape(B, nb * bs, *cache_v.shape[2:])
     kvpos = jnp.arange(nb * bs, dtype=jnp.int32)

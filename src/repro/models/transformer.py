@@ -311,7 +311,10 @@ def dense_prefill(params, tokens, cfg: ModelConfig, max_len: int):
     return logits, cache, stats
 
 
-def dense_prefill_chunk(params, tokens, cfg: ModelConfig, cache, block_table, cache_len):
+def dense_prefill_chunk(
+    params, tokens, cfg: ModelConfig, cache, block_table, cache_len,
+    attn_mode: str = "gather",
+):
     """One chunk of an incremental (paged) prefill for dense/moe/vlm.
 
     tokens (B, T) continue a prompt whose first ``cache_len`` tokens already
@@ -331,6 +334,7 @@ def dense_prefill_chunk(params, tokens, cfg: ModelConfig, cache, block_table, ca
         a, ck, cv = attention_decode_paged(
             lp["attn"], h, cfg, cache_k=ck, cache_v=cv,
             block_table=block_table, cache_len=cache_len, window=window,
+            attn_mode=attn_mode,
         )
         if cfg.sandwich_norms:
             a = rms_norm(a, lp["ln1_post"], cfg.norm_eps, True)
@@ -355,7 +359,7 @@ def dense_prefill_chunk(params, tokens, cfg: ModelConfig, cache, block_table, ca
 
 def dense_decode_step(
     params,
-    token,  # (B, 1) int32
+    token,  # (B, T) int32: T = 1 decode tick, T > 1 parallel multi-token verify
     cache,  # {"k","v": (L,B,Smax,K,hd)}; paged: (L,num_blocks,bs,K,hd)
     cache_len,  # int32: scalar, or (B,) per-slot lengths (continuous batching)
     cfg: ModelConfig,
@@ -367,12 +371,23 @@ def dense_decode_step(
     ffn_block_idx=None,  # (L, nb_keep) shared or (L, B, nb_keep) per-slot active
     # FFN block ids -> block-sparse pallas kernel instead of dense masked matmuls
     ffn_block_size: int = 128,
+    ffn_block_scale=None,  # (L, B, nb_keep) f32 per-(row, tile) contribution
+    # multiplier (per-request density nested inside the capacity-tier lists;
+    # 0.0 exactly zeroes a padding tile).  None = all tiles at full weight.
     ffn_groups=None,  # STATIC tuple of group sizes (each >= 2): rows whose
     # per-slot block lists are identical, batched through the shared-list
     # glass_ffn kernel; remaining rows run rowwise.  Requires ffn_row_perm.
     ffn_row_perm=None,  # (B,) int32: rows reordered group-major, singletons last
+    attn_mode: str = "gather",
 ):
-    """One decode step across all layers (scan). Returns (logits, new_cache)."""
+    """One decode step across all layers (scan). Returns (logits, new_cache).
+
+    ``T > 1`` tokens run every position through one forward with the causal
+    intra-chunk attention mask — the parallel speculative verify.  The
+    block-sparse FFN then flattens the ``(B, T)`` grid to ``B*T`` rows
+    (each slot's block list repeated per token) so the per-row kernels
+    apply unchanged; ``T = 1`` keeps today's exact code path.
+    """
     x = embed_tokens(params, token, cfg)
     windows = layer_windows(cfg)
     plus_one = cfg.sandwich_norms
@@ -380,12 +395,13 @@ def dense_decode_step(
         raise NotImplementedError("block-sparse decode targets dense-FFN families")
 
     def body(x, xs):
-        lp, ck, cv, window, mask_l, comp_l, bidx_l = xs
+        lp, ck, cv, window, mask_l, comp_l, bidx_l, bscale_l = xs
         h = rms_norm(x, lp["ln1"], cfg.norm_eps, plus_one)
         if block_table is not None:
             a, ck, cv = attention_decode_paged(
                 lp["attn"], h, cfg, cache_k=ck, cache_v=cv,
                 block_table=block_table, cache_len=cache_len, window=window,
+                attn_mode=attn_mode,
             )
         else:
             a, ck, cv = attention_decode(
@@ -402,38 +418,62 @@ def dense_decode_step(
             from ..kernels.ops import glass_ffn, glass_ffn_rowwise
 
             fp = lp["ffn"]
+            B_, T_ = h2.shape[0], h2.shape[1]
             if bidx_l.ndim == 2 and ffn_groups:
                 # shared-list batching: rows whose active-block lists are
                 # identical share ONE grid over the list (weight tiles are
                 # streamed once per group, not once per row); leftover
                 # singleton rows take the rowwise kernel in a single call
-                xb = h2[:, 0]
-                xp = xb[ffn_row_perm]
-                bp = bidx_l[ffn_row_perm]
+                if T_ == 1:
+                    xb, bi, bsc, perm = h2[:, 0], bidx_l, bscale_l, ffn_row_perm
+                    groups = ffn_groups
+                else:  # flatten (B, T) -> B*T rows, lists repeated per token
+                    xb = h2.reshape(B_ * T_, -1)
+                    bi = jnp.repeat(bidx_l, T_, axis=0)
+                    bsc = None if bscale_l is None else jnp.repeat(bscale_l, T_, axis=0)
+                    steps = jnp.arange(T_, dtype=ffn_row_perm.dtype)[None]
+                    perm = (ffn_row_perm[:, None] * T_ + steps).reshape(-1)
+                    groups = tuple(g * T_ for g in ffn_groups)
+                xp = xb[perm]
+                bp = bi[perm]
+                sp = None if bsc is None else bsc[perm]
                 parts = []
                 off = 0
-                for gs in ffn_groups:
+                for gs in groups:
                     parts.append(glass_ffn(
                         xp[off : off + gs], fp["w_up"], fp["w_down"],
                         bp[off], fp.get("w_gate"),
+                        block_scale=None if sp is None else sp[off],
                         act=cfg.ffn_act, block_size=ffn_block_size,
                     ))
                     off += gs
                 if off < xp.shape[0]:
                     parts.append(glass_ffn_rowwise(
                         xp[off:], fp["w_up"], fp["w_down"], bp[off:],
-                        fp.get("w_gate"), act=cfg.ffn_act,
-                        block_size=ffn_block_size,
+                        fp.get("w_gate"),
+                        block_scale=None if sp is None else sp[off:],
+                        act=cfg.ffn_act, block_size=ffn_block_size,
                     ))
                 yp = jnp.concatenate(parts, axis=0)
-                y32 = jnp.zeros_like(yp).at[ffn_row_perm].set(yp)
+                y32 = jnp.zeros_like(yp).at[perm].set(yp)
             else:
-                kernel = glass_ffn_rowwise if bidx_l.ndim == 2 else glass_ffn
+                per_row = bidx_l.ndim == 2
+                kernel = glass_ffn_rowwise if per_row else glass_ffn
+                if T_ == 1:
+                    xb, bi, bsc = h2[:, 0], bidx_l, bscale_l
+                else:
+                    xb = h2.reshape(B_ * T_, -1)
+                    bi = jnp.repeat(bidx_l, T_, axis=0) if per_row else bidx_l
+                    bsc = (
+                        None if bscale_l is None
+                        else jnp.repeat(bscale_l, T_, axis=0) if per_row
+                        else bscale_l
+                    )
                 y32 = kernel(
-                    h2[:, 0], fp["w_up"], fp["w_down"], bidx_l, fp.get("w_gate"),
-                    act=cfg.ffn_act, block_size=ffn_block_size,
+                    xb, fp["w_up"], fp["w_down"], bi, fp.get("w_gate"),
+                    block_scale=bsc, act=cfg.ffn_act, block_size=ffn_block_size,
                 )
-            y = y32.astype(x.dtype)[:, None]
+            y = y32.astype(x.dtype).reshape(B_, T_, -1)
         else:
             fp = comp_l if comp_l is not None else lp["ffn"]
             if mask_l is not None and mask_l.ndim == 2:  # per-slot (B, m)
@@ -448,21 +488,25 @@ def dense_decode_step(
     have_mask = ffn_masks is not None
     have_comp = compact_layers is not None
     have_bidx = ffn_block_idx is not None
+    have_bscale = ffn_block_scale is not None
     mask_xs = ffn_masks if have_mask else jnp.zeros((L, 0))
     comp_xs = compact_layers if have_comp else jnp.zeros((L, 0))
     bidx_xs = ffn_block_idx if have_bidx else jnp.zeros((L, 0))
+    bscale_xs = ffn_block_scale if have_bscale else jnp.zeros((L, 0))
 
     def body_wrap(x, xs):
-        lp, ck, cv, window, mask_l, comp_l, bidx_l = xs
+        lp, ck, cv, window, mask_l, comp_l, bidx_l, bscale_l = xs
         return body(
             x,
             (lp, ck, cv, window, mask_l if have_mask else None,
-             comp_l if have_comp else None, bidx_l if have_bidx else None),
+             comp_l if have_comp else None, bidx_l if have_bidx else None,
+             bscale_l if have_bscale else None),
         )
 
     x, (ck, cv) = jax.lax.scan(
         body_wrap, x,
-        (params["layers"], cache["k"], cache["v"], windows, mask_xs, comp_xs, bidx_xs),
+        (params["layers"], cache["k"], cache["v"], windows, mask_xs, comp_xs,
+         bidx_xs, bscale_xs),
     )
     x = rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.sandwich_norms)
     logits = lm_logits(params, x, cfg)
@@ -699,7 +743,7 @@ def hybrid_prefill(params, tokens, cfg: ModelConfig, max_len: int):
 
 def hybrid_decode_step(
     params, token, cache, cache_len, cfg: ModelConfig, *, shared_mask=None,
-    shared_compact=None, block_table=None
+    shared_compact=None, block_table=None, attn_mode: str = "gather"
 ):
     n_groups, g, n_tail = hybrid_layout(cfg)
     x = embed_tokens(params, token, cfg)
@@ -726,6 +770,7 @@ def hybrid_decode_step(
             a, ck, cv = attention_decode_paged(
                 sp["attn"], h, cfg, cache_k=ck, cache_v=cv,
                 block_table=block_table, cache_len=cache_len,
+                attn_mode=attn_mode,
             )
         else:
             a, ck, cv = attention_decode(
@@ -756,7 +801,10 @@ def hybrid_decode_step(
     return lm_logits(params, x, cfg), new_cache
 
 
-def hybrid_prefill_chunk(params, tokens, cfg: ModelConfig, cache, block_table, cache_len):
+def hybrid_prefill_chunk(
+    params, tokens, cfg: ModelConfig, cache, block_table, cache_len,
+    attn_mode: str = "gather",
+):
     """One chunk of an incremental hybrid (zamba2) prefill.
 
     Mamba layers thread their ssm/conv state rows as initial carries
@@ -786,6 +834,7 @@ def hybrid_prefill_chunk(params, tokens, cfg: ModelConfig, cache, block_table, c
         a, ck, cv = attention_decode_paged(
             sp["attn"], h, cfg, cache_k=ck, cache_v=cv,
             block_table=block_table, cache_len=cache_len,
+            attn_mode=attn_mode,
         )
         x = x + a
         h2 = rms_norm(x, sp["ln2"], cfg.norm_eps)

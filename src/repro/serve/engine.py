@@ -67,6 +67,7 @@ from .lifecycle import (
     SpecCheckpoint,
     preemption_kind,
 )
+from .programs import ProgramCache
 from .sampling import MAX_STOP_IDS, SamplingParams, sample, sample_positional
 from .scheduler import (
     AdmissionPolicy,
@@ -276,7 +277,14 @@ class GlassSlotState:
                 # distinguishes per-slot from the legacy shared (1, m) mask
                 return ms.mask  # (L, B, m) / (L, B, E, f) / hybrid (1, B, m)
             if mode == "block_sparse":
-                return ms.idx  # (L, B, nb_keep) int32 active block ids
+                # (L, B, nb_keep) active block ids + per-(row, tile) f32
+                # contribution multipliers: all-ones at the engine density
+                # (1.0 * tile is bitwise the unscaled tile), zeros on tiles a
+                # lower per-request density drops — see _override_fn
+                return {
+                    "idx": ms.idx,
+                    "scale": jnp.ones(ms.idx.shape, jnp.float32),
+                }
             return compact_params(model, params, ms.idx)
 
         def rows(params, prior, stacked):
@@ -316,19 +324,18 @@ class GlassSlotState:
             outside the request's own selection — the unit's contribution
             becomes exactly zero, so the fixed-``k`` arena row computes the
             request's lower-density FFN bit-for-bit;
-          * ``block_sparse`` has no zero mechanism inside the streaming
-            kernel, so per-request densities are rejected at add_request.
+          * ``block_sparse`` keeps the capacity tier's block LIST (the
+            kernel grid width is fixed per arena) and sets the per-(row,
+            tile) ``scale`` of blocks outside the request's nested
+            reselection to exactly 0.0 — a zero contribution added to the
+            kernel accumulator is bitwise a no-op, so the row computes the
+            lower-density FFN exactly while the tiles are still streamed
+            (I/O is traded for not recompiling per request).
         """
         key = (density, draft_density)
         fn = self._override_jits.get(key)
         if fn is not None:
             return fn
-        if self.mode == "block_sparse":
-            raise NotImplementedError(
-                "per-request density needs glass_mode='masked' or 'compact' — "
-                "the block-sparse kernel streams whole listed tiles and has "
-                "no way to zero a padding block's contribution"
-            )
         model, gcfg, mode, tiered = self.model, self.gcfg, self.mode, self.tiered
         hybrid = model.cfg.family == "hybrid"
 
@@ -352,6 +359,21 @@ class GlassSlotState:
                 rows_t = restrict(rows_t, valid)
             return rows_t
 
+        def one_block_tier(ms_cap, cap_density, req_density):
+            # the capacity tier's block ids keep the arena (and the kernel
+            # grid) fixed-width; the request's own lower-density selection
+            # NESTS inside it (same consensus scores, same stable
+            # tie-break), so reading the request's unit mask at each listed
+            # block's first unit yields exactly {0.0, 1.0} tile multipliers
+            idx = ms_cap.idx
+            scale = jnp.ones(idx.shape, jnp.float32)
+            if req_density < cap_density - 1e-12:
+                req_mask = reselect_at_density(ms_cap, gcfg, req_density).mask
+                scale = jnp.take_along_axis(
+                    req_mask, idx * gcfg.block_size, axis=-1
+                ).astype(jnp.float32)
+            return {"idx": idx, "scale": scale}
+
         def rows(params, prior, stacked):
             if mode == "masked":
                 ms = build_masks(
@@ -363,16 +385,20 @@ class GlassSlotState:
                 if tiered:
                     dmask = reselect_at_density(ms, gcfg, draft_density).mask
                 return ms.mask, dmask
+            one_tier = (
+                one_block_tier if mode == "block_sparse"
+                else partial(one_compact_tier, params)
+            )
             if tiered:
                 ms_cap, ds_cap = build_tiered_masks(stacked, prior, gcfg,
                                                     slot_axis=True)
-                tgt = one_compact_tier(params, ms_cap, gcfg.density, density)
-                dft = one_compact_tier(
-                    params, ds_cap, gcfg.density * gcfg.draft_ratio, draft_density
+                tgt = one_tier(ms_cap, gcfg.density, density)
+                dft = one_tier(
+                    ds_cap, gcfg.density * gcfg.draft_ratio, draft_density
                 )
                 return tgt, dft
             ms_cap = build_masks(stacked, prior, gcfg, slot_axis=True)
-            return one_compact_tier(params, ms_cap, gcfg.density, density), None
+            return one_tier(ms_cap, gcfg.density, density), None
 
         fn = jax.jit(rows)
         self._override_jits[key] = fn
@@ -599,7 +625,8 @@ class ContinuousEngine(_QueueEngineBase):
             elif mode == "compact":
                 kw["compact_layers"] = extra
             elif mode == "block_sparse":
-                kw["ffn_block_idx"] = extra
+                kw["ffn_block_idx"] = extra["idx"]
+                kw["ffn_block_scale"] = extra["scale"]
                 kw["ffn_block_size"] = bsz
 
             def body(carry, _):
@@ -767,6 +794,21 @@ class PagedEngine(_QueueEngineBase):
         that, including through mid-speculation preemption).  Requests
         with ``GlassParams(spec_k=0)`` interleave with speculating ones in
         the same tick via a plain decode over the non-participants.
+      * **attention path** (``attn_mode``) — ``"gather"`` materializes the
+        logical KV view through the block table before a reference
+        attention (the fallback and correctness oracle);
+        ``"paged_pallas"`` runs the fused paged-attention kernel
+        (``kernels/paged_attention.py``): block-table indirection,
+        causal/window masking, and online softmax in one pass, streaming
+        only live blocks.  Greedy token streams are identical either way.
+      * **speculative verify** (``verify_mode``) — ``"sequential"`` walks
+        the ``k + 1`` verify positions through the unrolled decode scan;
+        ``"parallel"`` scores all positions in ONE ``T``-wide forward
+        (``Model.verify_steps``), bit-identical on every live KV row by
+        construction (every KV-writing program is inline-compiled, never
+        a ``lax.scan`` body — see the comment in the decode builder).
+        ``"auto"`` picks parallel exactly when the family is stateless
+        and ``attn_mode="paged_pallas"``.
 
     **Per-request generation API** (the streaming frontend): submit with
     :meth:`add_request` under request-scoped :class:`SamplingParams`
@@ -807,11 +849,17 @@ class PagedEngine(_QueueEngineBase):
         decode_chunk: int = 8,  # max ticks fused into one jitted scan
         sampling: Optional[SamplingParams] = None,  # default SamplingParams
         prefix_cache: bool = False,  # content-addressed KV prefix reuse
+        attn_mode: str = "gather",  # gather | paged_pallas (fused kernel)
+        verify_mode: str = "auto",  # auto | sequential | parallel spec verify
     ):
         if glass is not None:
             assert global_prior is not None, "GLASS needs the offline prior"
         if model.cfg.is_encoder_decoder:
             raise NotImplementedError("continuous batching targets decoder LMs")
+        if attn_mode not in ("gather", "paged_pallas"):
+            raise ValueError(f"unknown attn_mode {attn_mode!r}")
+        if verify_mode not in ("auto", "sequential", "parallel"):
+            raise ValueError(f"unknown verify_mode {verify_mode!r}")
         if chunk_tokens < 1:
             raise ValueError(f"chunk_tokens must be >= 1, got {chunk_tokens}")
         if alloc_mode not in ("incremental", "full"):
@@ -896,6 +944,27 @@ class PagedEngine(_QueueEngineBase):
         has_paged = self.pool.has_paged
         axes_t, paged_t = self.pool.axes, self.pool.paged
         has_state = not all(jax.tree.leaves(self.pool.paged))
+        if attn_mode == "paged_pallas" and not has_paged:
+            raise ValueError(
+                "attn_mode='paged_pallas' needs a paged KV cache — this "
+                "family has no attention block table to fuse over"
+            )
+        self.attn_mode = attn_mode
+        if verify_mode == "parallel" and has_state:
+            raise ValueError(
+                "verify_mode='parallel' targets attention-backed families; "
+                "recurrent state must advance token-by-token to stay "
+                "bit-identical to sequential decode"
+            )
+        # auto: the fused kernel's query-on-grid construction is what makes
+        # a T = k+1 verify forward bitwise equal to k+1 sequential ticks, so
+        # the one-forward verify rides with attn_mode="paged_pallas" on
+        # stateless families and stays sequential otherwise
+        self._verify_parallel = verify_mode == "parallel" or (
+            verify_mode == "auto" and not has_state and attn_mode == "paged_pallas"
+        )
+        self.verify_mode = verify_mode
+        self.programs = ProgramCache()
 
         # the fused horizon H is carried by the (H, B) leading axis of
         # ftoks/fmask — the scan length and the per-H jit variants key off
@@ -906,22 +975,28 @@ class PagedEngine(_QueueEngineBase):
         # (the per-slot early-finish stop set, -1 padded).  ``sampled``
         # is the only policy static: an all-greedy batch compiles without
         # any sampling ops, preserving the PR-4 greedy program exactly.
-        def dec(pr, arena, lengths, toks, btab, dmask, extra, ftoks, fmask,
-                perm, pos0, seeds, temp, topk, topp, minp, gmask, stop_ids,
-                groups, sampled):
+        def mk_kw(extra, btab, perm, groups):
             kw = {}
             if mode == "masked":
                 kw["ffn_masks"] = extra
             elif mode == "compact":
                 kw["compact_layers"] = extra
             elif mode == "block_sparse":
-                kw["ffn_block_idx"] = extra
+                kw["ffn_block_idx"] = extra["idx"]
+                kw["ffn_block_scale"] = extra["scale"]
                 kw["ffn_block_size"] = bsz
                 if groups:  # shared-list batching: rows with identical lists
                     kw["ffn_groups"] = groups
                     kw["ffn_row_perm"] = perm
             if has_paged:
                 kw["block_table"] = btab
+                kw["attn_mode"] = attn_mode
+            return kw
+
+        def dec(pr, arena, lengths, toks, btab, dmask, extra, ftoks, fmask,
+                perm, pos0, seeds, temp, topk, topp, minp, gmask, stop_ids,
+                groups, sampled):
+            kw = mk_kw(extra, btab, perm, groups)
 
             def guard(old, new, ax, pg):
                 # recurrent-state rows of non-decoding slots (free, or holding
@@ -965,14 +1040,61 @@ class PagedEngine(_QueueEngineBase):
                 hit = jnp.any(nxt[:, None] == stop_ids, axis=-1) & ~fm
                 return (arena, lengths + 1, pos + 1, nxt), (nxt, verdict, hit)
 
-            (arena, _, _, _), (seq, tgt, hits) = jax.lax.scan(
-                body, (arena, lengths, pos0, toks), (ftoks, fmask)
-            )
+            # UNROLLED, not lax.scan: XLA compiles a while-loop body with
+            # different fusion choices than the same ops inlined, and the
+            # two disagree at the last ulp deep in the layer stack.  Every
+            # KV-writing program (this scan, the T-wide parallel verify, the
+            # chunked prefill) must be inline-compiled so their stored rows
+            # are bit-identical across programs — that is the invariant the
+            # speculative state suite asserts.  H is pow2-bucketed by the
+            # callers, so the unroll cost is bounded by the horizon buckets.
+            carry = (arena, lengths, pos0, toks)
+            outs = []
+            for j in range(ftoks.shape[0]):
+                carry, y = body(carry, (ftoks[j], fmask[j]))
+                outs.append(y)
+            arena = carry[0]
+            seq, tgt, hits = (jnp.stack(z) for z in zip(*outs))
             return seq, tgt, hits, arena  # seq/tgt/hits (H, B)
 
         # the arena is dead after each call — donate so the block pool (and
         # state rows) update in place instead of copying every tick
-        self._decode = jax.jit(dec, static_argnums=(18, 19), donate_argnums=(1,))
+        self._decode = self.programs.register(
+            "decode", dec, static_argnums=(18, 19), donate_argnums=(1,)
+        )
+
+        # the parallel speculative verify: every feed of a verify round is
+        # already known (pending + the k drafts, all forced), so stateless
+        # families answer all k+1 positions with ONE T-wide forward instead
+        # of a k+1-step scan.  The verdict math per position is byte-for-byte
+        # the scan body's; the fused attention kernel runs each query as its
+        # own grid program, so logits — and therefore verdicts and the KV
+        # rows the round scatters — are BIT-identical to the sequential path
+        # (the speculative state-invariant suite asserts it).
+        def pver(pr, arena, lengths, feed, btab, extra, perm, pos0, seeds,
+                 temp, topk, topp, minp, gmask, groups, sampled):
+            kw = mk_kw(extra, btab, perm, groups)
+            lg, arena = model.decode_step(pr, feed, arena, lengths, **kw)
+            lg = lg.astype(jnp.float32)  # (B, T, V)
+            greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            if sampled:
+                Bf, Tf = feed.shape
+                rep = lambda a: jnp.repeat(a, Tf, axis=0)
+                pos = (
+                    pos0[:, None] + jnp.arange(Tf, dtype=jnp.int32)[None]
+                ).reshape(-1)
+                samp = sample_positional(
+                    lg.reshape(Bf * Tf, -1), rep(seeds), pos, rep(temp),
+                    rep(topk), top_p=rep(topp), min_p=rep(minp),
+                ).reshape(Bf, Tf)
+                verdict = jnp.where(gmask[:, None], greedy, samp)
+            else:
+                verdict = greedy
+            return verdict.swapaxes(0, 1), arena  # verdicts (k+1, B)
+
+        self._pverify = self.programs.register(
+            "verify_parallel", pver, static_argnums=(14, 15), donate_argnums=(1,)
+        )
 
         axes, paged = self.pool.axes, self.pool.paged
 
@@ -983,8 +1105,10 @@ class PagedEngine(_QueueEngineBase):
                 return a if pg else jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=ax)
 
             rows = jax.tree.map(take, arena, axes, paged)
+            ckw = {"attn_mode": attn_mode} if has_paged else {}
             logits, new, stats = model.prefill_chunk(
-                pr, toks, rows, clen, block_table=btab if has_paged else None
+                pr, toks, rows, clen,
+                block_table=btab if has_paged else None, **ckw,
             )
 
             def put(a, n, ax, pg):
@@ -997,7 +1121,7 @@ class PagedEngine(_QueueEngineBase):
             arena = jax.tree.map(put, arena, new, axes, paged)
             return logits[:, -1], arena, stats
 
-        self._chunk = jax.jit(chunk, donate_argnums=(1,))
+        self._chunk = self.programs.register("chunk", chunk, donate_argnums=(1,))
 
     # -- public API ---------------------------------------------------------
 
@@ -1117,19 +1241,6 @@ class PagedEngine(_QueueEngineBase):
             raise ValueError(
                 f"request {req.uid}: draft_ratio needs an engine "
                 "GlassConfig(draft_ratio=...) draft arena"
-            )
-        per_density = abs(gp.density - self.glass.density) > eps
-        per_draft = (
-            self.glass.draft_ratio is not None
-            and gp.draft_ratio is not None
-            and abs(gp.density * gp.draft_ratio
-                    - self.glass.density * self.glass.draft_ratio) > eps
-        )
-        if self._mode == "block_sparse" and (per_density or per_draft):
-            raise ValueError(
-                f"request {req.uid}: per-request density needs "
-                "glass_mode='masked' or 'compact' — the block-sparse kernel "
-                "streams whole listed tiles"
             )
         if gp.spec_k:
             if self.glass.draft_ratio is None or gp.draft_ratio is None:
@@ -1578,9 +1689,15 @@ class PagedEngine(_QueueEngineBase):
                     [slot], [e.pstats], overrides=[self._glass_override(e)]
                 )
                 if self._mode == "block_sparse":
-                    # host copy of the (L, nb_keep) active-block list: the
-                    # group-by key for the shared-list decode kernel
-                    e.glass_key = np.asarray(rows[:, 0]).tobytes()
+                    # host copy of the (L, nb_keep) active-block list AND
+                    # its tile scales: the group-by key for the shared-list
+                    # decode kernel — rows may only batch through one shared
+                    # grid when both their lists and their per-request
+                    # density scales coincide
+                    e.glass_key = (
+                        np.asarray(rows["idx"][:, 0]).tobytes()
+                        + np.asarray(rows["scale"][:, 0]).tobytes()
+                    )
             e.pstats = None
             self.lc.to(e, ReqState.RUNNING)
             if e.outputs:
@@ -1835,15 +1952,34 @@ class PagedEngine(_QueueEngineBase):
         groups, perm = self._ffn_grouping(run)
         if perm is None:
             perm = np.zeros((B,), np.int32)
-        _, tgt, _, arena = self._decode(
-            self.params, self.pool.cache, jnp.asarray(lengths), jnp.asarray(toks),
-            jnp.asarray(btab), jnp.asarray(decoding), self.glass_slots.arena,
-            jnp.asarray(ftoks), jnp.asarray(fmask), jnp.asarray(perm),
-            jnp.asarray(pos0), jnp.asarray(seeds), jnp.asarray(temp),
-            jnp.asarray(topk), jnp.asarray(topp), jnp.asarray(minp),
-            jnp.asarray(gmask), jnp.asarray(stop_ids),
-            groups, sampled,
-        )
+        if self._verify_parallel:
+            # ONE T = k+1 forward instead of the k+1-step scan: the feed is
+            # fully known up front (pending + drafts, all forced), and the
+            # per-query kernel grid keeps logits bitwise equal to the scan
+            feed = np.zeros((B, k + 1), np.int32)
+            feed[:, 0] = toks
+            for e in run:
+                ck = e.spec_ckpt
+                for j in range(k):
+                    feed[e.slot, j + 1] = e.outputs[ck.out_len + j]
+            tgt, arena = self._pverify(
+                self.params, self.pool.cache, jnp.asarray(lengths),
+                jnp.asarray(feed), jnp.asarray(btab), self.glass_slots.arena,
+                jnp.asarray(perm), jnp.asarray(pos0), jnp.asarray(seeds),
+                jnp.asarray(temp), jnp.asarray(topk), jnp.asarray(topp),
+                jnp.asarray(minp), jnp.asarray(gmask),
+                groups, sampled,
+            )
+        else:
+            _, tgt, _, arena = self._decode(
+                self.params, self.pool.cache, jnp.asarray(lengths), jnp.asarray(toks),
+                jnp.asarray(btab), jnp.asarray(decoding), self.glass_slots.arena,
+                jnp.asarray(ftoks), jnp.asarray(fmask), jnp.asarray(perm),
+                jnp.asarray(pos0), jnp.asarray(seeds), jnp.asarray(temp),
+                jnp.asarray(topk), jnp.asarray(topp), jnp.asarray(minp),
+                jnp.asarray(gmask), jnp.asarray(stop_ids),
+                groups, sampled,
+            )
         self.pool.cache = arena
         tgt = np.asarray(tgt)  # (k+1, B) target-tier verdicts
         self.spec_ticks += 1

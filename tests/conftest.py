@@ -26,6 +26,13 @@ def pytest_configure(config):
     )
     config.addinivalue_line(
         "markers",
+        "kernels: fused paged-attention kernel suite (kernel vs gather "
+        "reference, T>1 parallel-verify bit-equality, pow2 bucket invariance, "
+        "compiled-program churn); CI runs it as its own lane, excluded from "
+        "tier-1",
+    )
+    config.addinivalue_line(
+        "markers",
         "sampling: per-request generation API suite (SamplingParams counter-"
         "based PRNG, GlassParams densities, streaming RequestOutput, abort, "
         "EOS early finish); CI runs it as its own lane",
@@ -37,6 +44,24 @@ def pytest_configure(config):
         "prefill); CI runs it as its own lane under PREFIX_GLASS_MODE=fused "
         "and PREFIX_GLASS_MODE=block_sparse",
     )
+
+
+# ATTN_MODE=paged_pallas reruns the whole serving corpus through the fused
+# paged-attention kernel: every PagedEngine a test builds (unless it passes
+# attn_mode itself) picks the mode up here.  Pure-recurrent families have no
+# attention block table to fuse over and keep the gather default.
+_ATTN_MODE = os.environ.get("ATTN_MODE", "gather")
+if _ATTN_MODE != "gather":
+    from repro.serve.engine import PagedEngine as _PagedEngine
+
+    _orig_init = _PagedEngine.__init__
+
+    def _attn_mode_init(self, model, params, *args, **kwargs):
+        if "attn_mode" not in kwargs and getattr(model.cfg, "family", "") != "ssm":
+            kwargs["attn_mode"] = _ATTN_MODE
+        _orig_init(self, model, params, *args, **kwargs)
+
+    _PagedEngine.__init__ = _attn_mode_init
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,314 @@
+"""Fused paged-attention kernel suite (``-m kernels`` CI lane).
+
+Three layers of evidence, bottom-up:
+
+  * KERNEL vs reference — the Pallas kernel against a dense gather +
+    masked-softmax reference on hostile pool states: block tables with
+    holes (padding entries at trash block 0), garbage in rows past the
+    frontier, frontier-partial blocks, sliding windows, softcap, and
+    T > 1 query chunks.  allclose, because the online softmax is a
+    different summation order than the reference's dense softmax.
+  * BIT-level contracts — the properties the serving engine builds on,
+    asserted with ``==`` not allclose: a T-wide forward equals T
+    sequential single-query calls (the parallel-verify contract), and
+    output is invariant to the pow2 ``nb`` bucket the table is padded to
+    (dead entries stream the trash block but mask to exact zeros).
+  * MODEL/ENGINE level — decode_step under ``attn_mode="paged_pallas"``
+    against the gather path for every attention family, verify_steps'
+    one-forward parallel mode against the sequential scan (tokens AND
+    cache bitwise), and the compiled-program churn invariant: replaying
+    an identical engine workload must not add a single jit variant.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import paged_attention
+from repro.models import ModelConfig, build_model
+
+pytestmark = pytest.mark.kernels
+
+BASE = dict(n_layers=2, d_model=48, n_heads=4, n_kv_heads=2, head_dim=12,
+            d_ff=96, vocab_size=101, dtype="float32", remat="none")
+DENSE = ModelConfig(name="pk-dense", family="dense", **BASE)
+MOE = ModelConfig(name="pk-moe", family="moe", n_experts=4, n_experts_per_tok=2,
+                  moe_strategy="dense", **BASE)
+HYBRID = ModelConfig(name="pk-hybrid", family="hybrid", attn_every=2,
+                     ssm_state=16, mamba_headdim=12, **{**BASE, "n_layers": 4})
+
+GLOBAL = 2**30
+
+
+def _reference(q, cache_k, cache_v, block_table, cache_len, window,
+               softcap=None, scale=None):
+    """Dense gather + masked softmax — mirrors the gather path of
+    attention_decode_paged, shapes (B,T,K,G,hd) against (N,bs,K,hd)."""
+    B, T, K, G, hd = q.shape
+    nb = block_table.shape[1]
+    bs = cache_k.shape[1]
+    scale = scale if scale is not None else hd**-0.5
+    kg = np.asarray(cache_k)[np.asarray(block_table)].reshape(B, nb * bs, K, hd)
+    vg = np.asarray(cache_v)[np.asarray(block_table)].reshape(B, nb * bs, K, hd)
+    qpos = np.asarray(cache_len)[:, None] + np.arange(T)[None]  # (B, T)
+    kpos = np.arange(nb * bs)
+    mask = (qpos[:, :, None] >= kpos) & ((qpos[:, :, None] - kpos) < window)
+    s = np.einsum("btkgd,bnkd->btkgn", np.asarray(q, np.float32),
+                  kg.astype(np.float32)) * scale
+    if softcap is not None:
+        s = softcap * np.tanh(s / softcap)
+    s = np.where(mask[:, :, None, None, :], s, -np.inf)
+    s = s - s.max(-1, keepdims=True)
+    p = np.exp(s)
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("btkgn,bnkd->btkgd", p, vg.astype(np.float32))
+
+
+def _pool(rng, num_blocks=9, bs=8, K=2, hd=12):
+    cache_k = rng.randn(num_blocks, bs, K, hd).astype(np.float32)
+    cache_v = rng.randn(num_blocks, bs, K, hd).astype(np.float32)
+    return jnp.asarray(cache_k), jnp.asarray(cache_v)
+
+
+@pytest.mark.parametrize("window,softcap", [(GLOBAL, None), (6, None),
+                                            (GLOBAL, 30.0), (3, 12.0)])
+def test_kernel_matches_reference(window, softcap):
+    """Holes, trash rows, and frontier-partial blocks: the pool carries
+    garbage everywhere the table/frontier says is dead, and the kernel
+    must reproduce the reference that never reads those rows."""
+    rng = np.random.RandomState(0)
+    B, T, K, G, hd, bs = 2, 3, 2, 2, 12, 8
+    cache_k, cache_v = _pool(rng, bs=bs, K=K, hd=hd)
+    # slot 0: 7 live rows in block 1 (partial frontier block), padding -> 0
+    # slot 1: 13 live rows across blocks 3,4 (block 4 partial), hole at [1]=0
+    btab = jnp.asarray([[1, 0, 0, 0], [3, 4, 0, 0]], jnp.int32)
+    clen = jnp.asarray([4, 10], jnp.int32)  # + T new rows scattered below
+    q = jnp.asarray(rng.randn(B, T, K, G, hd), jnp.float32)
+    newk = jnp.asarray(rng.randn(B, T, K, hd), jnp.float32)
+    newv = jnp.asarray(rng.randn(B, T, K, hd), jnp.float32)
+    pos = clen[:, None] + jnp.arange(T)[None]
+    pages = jnp.take_along_axis(btab, pos // bs, axis=1)
+    cache_k = cache_k.at[pages, pos % bs].set(newk)
+    cache_v = cache_v.at[pages, pos % bs].set(newv)
+    out = paged_attention(q, cache_k, cache_v, btab, clen,
+                          jnp.int32(window), softcap=softcap)
+    ref = _reference(q, cache_k, cache_v, btab, clen, window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=1e-5, rtol=1e-5)
+
+
+def test_kernel_ignores_trash_and_dead_rows():
+    """Poisoning the trash block, the rows past each frontier, and every
+    unreferenced block must not move a single output bit."""
+    rng = np.random.RandomState(1)
+    B, T, K, G, hd, bs = 2, 1, 2, 2, 12, 8
+    cache_k, cache_v = _pool(rng, bs=bs, K=K, hd=hd)
+    btab = jnp.asarray([[1, 2, 0, 0], [3, 0, 0, 0]], jnp.int32)
+    clen = jnp.asarray([11, 5], jnp.int32)
+    q = jnp.asarray(rng.randn(B, T, K, G, hd), jnp.float32)
+    pos = clen[:, None]
+    pages = jnp.take_along_axis(btab, pos // bs, axis=1)
+    newk = jnp.asarray(rng.randn(B, T, K, hd), jnp.float32)
+    cache_k = cache_k.at[pages, pos % bs].set(newk)
+    cache_v = cache_v.at[pages, pos % bs].set(newk)
+    out = paged_attention(q, cache_k, cache_v, btab, clen, jnp.int32(GLOBAL))
+    poison = 1e6
+    pk, pv = np.asarray(cache_k).copy(), np.asarray(cache_v).copy()
+    pk[0] = poison; pv[0] = poison            # trash block
+    pk[5:] = poison; pv[5:] = poison          # unreferenced blocks
+    pk[2, 5:] = poison; pv[2, 5:] = poison    # rows past slot 0's frontier
+    pk[3, 6:] = poison; pv[3, 6:] = poison    # rows past slot 1's frontier
+    out_p = paged_attention(q, jnp.asarray(pk), jnp.asarray(pv), btab, clen,
+                            jnp.int32(GLOBAL))
+    assert bool((out == out_p).all())
+
+
+def test_kernel_pow2_bucket_invariance():
+    """The same logical state padded to wider nb buckets (extra entries at
+    trash block 0) must produce bitwise identical output — the engine's
+    pow2 table bucketing rides on this."""
+    rng = np.random.RandomState(2)
+    B, T, K, G, hd, bs = 2, 2, 2, 2, 12, 8
+    cache_k, cache_v = _pool(rng, num_blocks=9, bs=bs, K=K, hd=hd)
+    clen = jnp.asarray([6, 3], jnp.int32)
+    q = jnp.asarray(rng.randn(B, T, K, G, hd), jnp.float32)
+    tabs = {
+        2: jnp.asarray([[1, 2], [3, 0]], jnp.int32),
+        4: jnp.asarray([[1, 2, 0, 0], [3, 0, 0, 0]], jnp.int32),
+        8: jnp.asarray([[1, 2, 0, 0, 0, 0, 0, 0],
+                        [3, 0, 0, 0, 0, 0, 0, 0]], jnp.int32),
+    }
+    pos = clen[:, None] + jnp.arange(T)[None]
+    pages = jnp.take_along_axis(tabs[4], pos // bs, axis=1)
+    newk = jnp.asarray(rng.randn(B, T, K, hd), jnp.float32)
+    cache_k = cache_k.at[pages, pos % bs].set(newk)
+    cache_v = cache_v.at[pages, pos % bs].set(newk)
+    outs = [
+        np.asarray(paged_attention(q, cache_k, cache_v, tab, clen,
+                                   jnp.int32(GLOBAL)))
+        for tab in tabs.values()
+    ]
+    assert np.array_equal(outs[0], outs[1])
+    assert np.array_equal(outs[1], outs[2])
+
+
+def test_kernel_parallel_queries_bitwise_equal_sequential():
+    """The parallel-verify contract at kernel level: a T-wide call answers
+    each query with exactly the bits of a T=1 call at that position (the
+    query axis lives on the grid, so the traced op graph per (slot, query,
+    head) program is identical whatever T is)."""
+    rng = np.random.RandomState(3)
+    B, T, K, G, hd, bs = 2, 4, 2, 2, 12, 8
+    cache_k, cache_v = _pool(rng, num_blocks=9, bs=bs, K=K, hd=hd)
+    btab = jnp.asarray([[1, 2, 0, 0], [3, 4, 0, 0]], jnp.int32)
+    clen = jnp.asarray([7, 5], jnp.int32)
+    q = jnp.asarray(rng.randn(B, T, K, G, hd), jnp.float32)
+    newk = jnp.asarray(rng.randn(B, T, K, hd), jnp.float32)
+    newv = jnp.asarray(rng.randn(B, T, K, hd), jnp.float32)
+    pos = clen[:, None] + jnp.arange(T)[None]
+    pages = jnp.take_along_axis(btab, pos // bs, axis=1)
+    cache_k = cache_k.at[pages, pos % bs].set(newk)
+    cache_v = cache_v.at[pages, pos % bs].set(newv)
+    wide = np.asarray(paged_attention(q, cache_k, cache_v, btab, clen,
+                                      jnp.int32(GLOBAL)))
+    for t in range(T):
+        one = np.asarray(paged_attention(q[:, t:t + 1], cache_k, cache_v,
+                                         btab, clen + t, jnp.int32(GLOBAL)))
+        assert np.array_equal(wide[:, t:t + 1], one), f"query {t} diverged"
+
+
+@pytest.mark.parametrize("cfg", [DENSE, MOE, HYBRID],
+                         ids=["dense", "moe", "hybrid"])
+def test_decode_step_gather_vs_pallas(cfg):
+    """Model level: attn_mode='paged_pallas' agrees with the gather path
+    (allclose — the online softmax is a different summation order) and
+    picks the same argmax tokens, for every attention-carrying family."""
+    from repro.serve.kv_pool import BlockPool
+
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    pool = BlockPool(model, max_slots=2, max_len=32, block_size=8)
+    rng = np.random.RandomState(4)
+    cache = jax.tree.map(
+        lambda a, pg: jnp.asarray(rng.randn(*a.shape) * 0.3, a.dtype)
+        if pg else a,
+        pool.cache, pool.paged,
+    )
+    btab = jnp.asarray([[1, 2, 0, 0], [3, 4, 0, 0]], jnp.int32)
+    clen = jnp.asarray([7, 5], jnp.int32)
+    toks = jnp.asarray(rng.randint(3, 101, size=(2, 1)), jnp.int32)
+    lg_g, _ = model.decode_step(params, toks, cache, clen,
+                                block_table=btab, attn_mode="gather")
+    lg_p, _ = model.decode_step(params, toks, cache, clen,
+                                block_table=btab, attn_mode="paged_pallas")
+    np.testing.assert_allclose(np.asarray(lg_g), np.asarray(lg_p),
+                               atol=2e-5, rtol=2e-5)
+    assert np.array_equal(np.asarray(jnp.argmax(lg_g, -1)),
+                          np.asarray(jnp.argmax(lg_p, -1)))
+
+
+def test_decode_step_parallel_bitwise_vs_sequential():
+    """The full-step parallel-verify contract: one T-wide decode_step
+    (pallas attention, block-sparse GLASS FFN) produces bitwise the
+    logits and KV writes of T sequential single-token steps."""
+    cfg = DENSE
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    L = cfg.n_layers
+    rng = np.random.RandomState(5)
+    NB, BS, K, HD = 9, 8, cfg.n_kv_heads, cfg.head_dim
+    cache = {"k": jnp.asarray(rng.randn(L, NB, BS, K, HD), jnp.float32),
+             "v": jnp.asarray(rng.randn(L, NB, BS, K, HD), jnp.float32)}
+    btab = jnp.asarray([[1, 2, 0, 0], [3, 4, 0, 0]], jnp.int32)
+    clen = jnp.asarray([7, 5], jnp.int32)
+    feed = jnp.asarray(rng.randint(3, 101, size=(2, 4)), jnp.int32)
+    bidx = jnp.asarray(rng.randint(0, 3, size=(L, 2, 2)), jnp.int32)
+    scale = jnp.ones((L, 2, 2), jnp.float32)
+    kw = dict(block_table=btab, attn_mode="paged_pallas",
+              ffn_block_idx=bidx, ffn_block_size=32, ffn_block_scale=scale)
+
+    @jax.jit
+    def wide(pr, cache, feed, clen):
+        return model.decode_step(pr, feed, cache, clen, **kw)
+
+    @jax.jit
+    def one(pr, cache, tok, clen):
+        return model.decode_step(pr, tok[:, None], cache, clen, **kw)
+
+    lw, cw = wide(params, cache, feed, clen)
+    c, l = cache, clen
+    for t in range(4):
+        lg, c = one(params, c, feed[:, t], l)
+        assert np.array_equal(np.asarray(lw[:, t]), np.asarray(lg[:, 0])), t
+        l = l + 1
+    for name in ("k", "v"):
+        assert np.array_equal(np.asarray(cw[name]), np.asarray(c[name])), name
+
+
+def test_verify_steps_parallel_matches_sequential():
+    """API level: Model.verify_steps(parallel=True) returns the same
+    verdicts and the same cache bits as the sequential scan."""
+    cfg = DENSE
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    L = cfg.n_layers
+    rng = np.random.RandomState(6)
+    NB, BS, K, HD = 9, 8, cfg.n_kv_heads, cfg.head_dim
+    cache = {"k": jnp.asarray(rng.randn(L, NB, BS, K, HD), jnp.float32),
+             "v": jnp.asarray(rng.randn(L, NB, BS, K, HD), jnp.float32)}
+    btab = jnp.asarray([[1, 2, 0, 0], [3, 4, 0, 0]], jnp.int32)
+    clen = jnp.asarray([7, 5], jnp.int32)
+    toks = jnp.asarray(rng.randint(3, 101, size=(2, 4)), jnp.int32)
+    kw = dict(block_table=btab, attn_mode="paged_pallas")
+    g_s, c_s = model.verify_steps(params, toks, cache, clen, **kw)
+    g_p, c_p = model.verify_steps(params, toks, cache, clen, parallel=True,
+                                  **kw)
+    assert np.array_equal(np.asarray(g_s), np.asarray(g_p))
+    for a, b in zip(jax.tree.leaves(c_s), jax.tree.leaves(c_p)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_verify_steps_parallel_rejects_recurrent():
+    cfg = ModelConfig(name="pk-ssm", family="ssm", rwkv_headdim=12, **BASE)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    cache = model.init_cache(1, 16)
+    toks = jnp.zeros((1, 3), jnp.int32)
+    with pytest.raises(NotImplementedError):
+        model.verify_steps(params, toks, cache, jnp.zeros((1,), jnp.int32),
+                           parallel=True)
+
+
+def test_engine_program_cache_no_churn_on_replay():
+    """Satellite invariant: the centralized ProgramCache reports ZERO new
+    compiled variants when an identical workload replays — the pow2
+    bucketing of gather widths and scan horizons is doing its job."""
+    from repro.core import GlassConfig
+    from repro.serve.engine import PagedEngine
+
+    model = build_model(DENSE)
+    params = model.init(jax.random.key(0))
+    g = GlassConfig(density=0.5, selection="block", block_size=32,
+                    draft_ratio=0.5)
+    prior = jnp.abs(jax.random.normal(jax.random.key(7),
+                                      (DENSE.n_layers, DENSE.d_ff)))
+    eng = PagedEngine(model, params, max_slots=2, max_len=64, block_size=8,
+                      chunk_tokens=4, glass=g, global_prior=prior,
+                      glass_mode="block_sparse", spec_k=3,
+                      attn_mode="paged_pallas")
+
+    def drive(uid0):
+        rng = np.random.RandomState(9)
+        for i, (l, n) in enumerate([(7, 10), (5, 8)]):
+            eng.add_request(rng.randint(3, 101, size=l).astype(np.int32), n,
+                            uid=uid0 + i)
+        for _ in range(64):
+            eng.step()
+            if not eng.lc.entries:
+                break
+        assert not eng.lc.entries
+
+    drive(0)
+    assert eng.programs.total() > 0
+    snap = eng.programs.snapshot()
+    drive(100)  # identical workload, same engine
+    assert eng.programs.misses_since(snap) == {}

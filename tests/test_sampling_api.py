@@ -382,18 +382,24 @@ def test_seeded_stream_replays_identically():
 # -- per-request GLASS density ------------------------------------------------
 
 
-@pytest.mark.parametrize("mode", ["compact", "masked"])
+@pytest.mark.parametrize("mode", ["compact", "masked", "block_sparse"])
 def test_per_request_density_matches_engine_at_that_density(mode):
     """A request at density 0.25 inside a density-0.5 engine (capacity
     tier) must produce the stream of an engine CONFIGURED at 0.25 — the
     compact path proves the down-projection zeroing is exact, the masked
-    path the direct low-density mask."""
-    glass_hi = GlassConfig(density=0.5)
+    path the direct low-density mask, and the block_sparse path the
+    per-(row, tile) contribution scales on the streaming kernel (blocks
+    selected at the lower density keep scale 1, the rest scale 0)."""
+    if mode == "block_sparse":
+        glass_hi = GlassConfig(density=0.5, selection="block", block_size=32)
+        glass_lo = GlassConfig(density=0.25, selection="block", block_size=32)
+    else:
+        glass_hi = GlassConfig(density=0.5)
+        glass_lo = GlassConfig(density=0.25)
     _, _, prior, eng = _engine(glass=glass_hi, glass_mode=mode)
     u = eng.add_request(_prompt(6), 10, glass=GlassParams(density=0.25))
     got = _drain(eng)[u]
-    _, _, _, ref = _engine(glass=GlassConfig(density=0.25), prior=prior,
-                           glass_mode=mode)
+    _, _, _, ref = _engine(glass=glass_lo, prior=prior, glass_mode=mode)
     ur = ref.add_request(_prompt(6), 10)
     want = _drain(ref)[ur]
     np.testing.assert_array_equal(want.tokens, got.tokens)
@@ -436,12 +442,14 @@ def test_per_request_glass_validation():
     with pytest.warns(DeprecationWarning, match="counter-based"):
         PagedEngine(model, model.init(jax.random.key(0)), max_slots=2,
                     max_len=32, block_size=8, rng=jax.random.key(3))
-    # block_sparse: per-request densities cannot feed the streaming kernel
+    # block_sparse: per-request densities feed the streaming kernel through
+    # per-(row, tile) contribution scales — lower AND equal both admit
     bs = GlassConfig(density=0.5, selection="block", block_size=32)
     _, _, _, bse = _engine(glass=bs, glass_mode="block_sparse")
-    with pytest.raises(ValueError, match="block-sparse"):
-        bse.add_request(_prompt(), 4, glass=GlassParams(density=0.25))
-    bse.add_request(_prompt(), 4, glass=GlassParams(density=0.5))  # equal: fine
+    bse.add_request(_prompt(), 4, glass=GlassParams(density=0.25))
+    bse.add_request(_prompt(), 4, glass=GlassParams(density=0.5))
+    with pytest.raises(ValueError, match="exceeds the engine capacity"):
+        bse.add_request(_prompt(), 4, glass=GlassParams(density=0.9))
 
 
 # -- early finish: EOS / stop tokens inside the scan --------------------------

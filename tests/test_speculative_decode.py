@@ -43,6 +43,9 @@ from repro.serve.scheduler import Request
 pytestmark = pytest.mark.speculative
 
 SPEC_LANE = os.environ.get("SPEC_GLASS_MODE", "fused")  # fused | block_sparse
+# gather | paged_pallas — CI runs the serving suites under both; families
+# without an attention KV pool (rwkv6) always take the gather default
+ATTN_MODE = os.environ.get("ATTN_MODE", "gather")
 
 BASE = dict(n_layers=2, d_model=48, n_heads=4, n_kv_heads=2, head_dim=12,
             d_ff=96, vocab_size=101, dtype="float32", remat="none")
@@ -94,10 +97,11 @@ def _engines(family, *, spec_k, draft_ratio=0.5, max_slots=2, max_len=64,
     params = model.init(jax.random.key(seed))
     prior = _prior_for(cfg)
     glass = _glass(sel, bsz, draft_ratio)
+    attn = ATTN_MODE if cfg.family != "ssm" else "gather"
     eng = PagedEngine(model, params, max_slots=max_slots, max_len=max_len,
                       block_size=8, num_blocks=num_blocks, chunk_tokens=4,
                       glass=glass, global_prior=prior, glass_mode=mode,
-                      spec_k=spec_k, decode_chunk=decode_chunk)
+                      spec_k=spec_k, decode_chunk=decode_chunk, attn_mode=attn)
     return model, params, prior, glass, eng
 
 
@@ -227,8 +231,12 @@ def test_tiered_config_validation():
 
 def test_verify_steps_bitwise_matches_sequential():
     """Model.verify_steps must return the SAME greedy verdicts and leave the
-    cache BIT-identical to T individual decode steps — the contract the
-    engine-level rollback exactness rests on."""
+    cache BIT-identical to T individual JITTED decode steps — the contract
+    the engine-level rollback exactness rests on.  The reference steps must
+    be jitted: verify_steps is inline-compiled (unrolled, never a scan body)
+    precisely so it matches other inline-compiled programs bit-for-bit, and
+    eager op-by-op dispatch fuses nothing so it sits outside that contract
+    (the engine only ever runs jitted programs)."""
     model = build_model(DENSE)
     params = model.init(jax.random.key(0))
     toks = jnp.asarray(np.random.RandomState(0).randint(3, 101, size=(1, 5)),
@@ -239,11 +247,12 @@ def test_verify_steps_bitwise_matches_sequential():
     greedy, cache_v = jax.jit(
         lambda p, c, t: model.verify_steps(p, t, c, jnp.int32(5))
     )(params, cache0, feed)
+    step = jax.jit(model.decode_step)
     cache_s = cache0
     seq = []
     for j in range(4):
-        lg, cache_s = model.decode_step(params, feed[:, j : j + 1], cache_s,
-                                        jnp.int32(5 + j))
+        lg, cache_s = step(params, feed[:, j : j + 1], cache_s,
+                           jnp.int32(5 + j))
         seq.append(int(jnp.argmax(lg[0, -1].astype(jnp.float32))))
     assert list(np.asarray(greedy)[0]) == seq
     for a, b in zip(jax.tree.leaves(cache_v), jax.tree.leaves(cache_s)):
