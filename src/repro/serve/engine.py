@@ -41,7 +41,7 @@ import itertools
 import warnings
 from dataclasses import dataclass, replace
 from functools import partial
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,7 +58,13 @@ from ..core.glass import (
     snapshot_stat_sums,
 )
 from ..models.api import Model
-from .kv_pool import BlockPool, KVPool, clear_slot_leaf, pow2_bucket as _pow2_bucket
+from .kv_pool import (
+    BlockPool,
+    KVPool,
+    SwappedWire,
+    clear_slot_leaf,
+    pow2_bucket as _pow2_bucket,
+)
 from .lifecycle import (
     Lifecycle,
     LiveRequest,
@@ -461,12 +467,18 @@ class GlassSlotState:
         return (self._save(self.arena, jnp.int32(slot)), draft)
 
     def restore(self, slot: int, rows) -> None:
-        """Write back rows captured by :meth:`save` at a (new) slot."""
+        """Write back rows captured by :meth:`save` at a (new) slot.  The
+        arenas are lazily initialized from the rows' own shapes: a migrated
+        request may land on an engine that has not admitted anything yet."""
         if rows is None:
             return
         target, draft = rows
+        if self.arena is None:
+            self.arena = self._init_arena(target)
         self.arena = self._write(self.arena, target, jnp.asarray([slot], jnp.int32))
         if draft is not None:
+            if self.draft_arena is None:
+                self.draft_arena = self._init_arena(draft)
             self.draft_arena = self._write(self.draft_arena, draft, jnp.asarray([slot], jnp.int32))
 
     def clear(self, slot: int) -> None:
@@ -478,6 +490,44 @@ class GlassSlotState:
             self.arena = self._clear(self.arena, jnp.int32(slot))
         if self.draft_arena is not None:
             self.draft_arena = self._clear(self.draft_arena, jnp.int32(slot))
+
+
+@dataclass
+class MigrationTicket:
+    """One request's complete host-side serving state in flight between two
+    engines (cross-replica migration).
+
+    Everything device-side travels in ``wire`` (KV blocks + recurrent-state
+    rows, pool-independent — :class:`~repro.serve.kv_pool.SwappedWire`) and
+    ``glass_rows`` (the GLASS slot rows, device_get to host numpy).
+    Everything host-side is the request's lifecycle bookkeeping: the token
+    stream, the forced-replay cursor, the counter-based PRNG position, and
+    the resolved per-request policies — exactly the fields the destination
+    needs to continue the stream bit-identically.  ``mid_prefill`` tickets
+    carry ``pstats`` (the partial GLASS stat left-fold, host numpy) instead
+    of ``glass_rows``: the mask is not finalized yet, so the destination
+    resumes the chunked prefill at ``prefill_pos`` (always a chunk
+    boundary — migration runs between ticks) and keeps folding.
+
+    In-process this is a plain dataclass; a multi-process transport would
+    serialize exactly these fields (the arrays are host numpy throughout).
+    """
+
+    req: Request
+    sp: SamplingParams
+    gp: GlassParams
+    wire: SwappedWire
+    outputs: List[int]
+    pending: int
+    replay_left: int
+    rng_pos: int
+    emitted: int
+    preemptions: int
+    prefill_pos: int
+    mid_prefill: bool
+    glass_rows: Any = None  # host copy of GlassSlotState.save(slot), or None
+    glass_key: Optional[bytes] = None  # block_sparse decode grouping key
+    pstats: Any = None  # host stat-sum snapshot (mid-prefill tickets only)
 
 
 class _QueueEngineBase:
@@ -925,6 +975,14 @@ class PagedEngine(_QueueEngineBase):
         self.swap_bytes = 0  # bytes copied device -> host by swap-outs
         self.swap_ins = 0
         self.recompute_tokens = 0  # tokens dropped by recompute preemptions
+        # host swap-store residency (PreemptionConfig.swap_store_cap_bytes)
+        self.swap_store_bytes = 0  # resident host bytes across swapped entries
+        self.swap_cap_evictions = 0  # swapped requests degraded to recompute
+        self._swap_seq = itertools.count()  # swap-out order (cap evicts oldest)
+        # cross-engine migration telemetry (driven by serve.cluster)
+        self.migrations_out = 0
+        self.migrations_in = 0
+        self.migration_bytes = 0  # wire bytes exported by migrate_out
         self.grouped_rows = 0  # decode row-ticks served by the shared-list kernel
         self.admission_waits: List[int] = []  # first-admission latency per request
         self.decode_chunk = max(1, decode_chunk)
@@ -1290,14 +1348,170 @@ class PagedEngine(_QueueEngineBase):
             # a swapped request keeps ownership refs on shared prefix
             # blocks it never copied to host — drop them or they leak
             self.pool.release_swapped(e.swap)
+            self.swap_store_bytes -= e.swap.nbytes
+            e.swap = None
+            e.swap_seq = -1
+            e.glass_rows = None
+        elif e.state is ReqState.MIGRATING:
+            # abort-while-migrating: a migration store is a FULL swap (no
+            # kept refs on either pool) and was never charged to this
+            # engine's host store — dropping it releases both sides
             e.swap = None
             e.glass_rows = None
+            e.pstats = None
         elif e.state is ReqState.PREEMPTED_RECOMPUTE:
             self.scheduler.remove(uid)
         self.lc.to(e, ReqState.FINISHED)
         self._policies.pop(uid, None)
         e.finish_reason = "aborted"
         return self._output(e, finished=True, reason="aborted")
+
+    # -- cross-engine migration (replica-sharded serving) --------------------
+
+    def migrate_out(self, uid: int) -> MigrationTicket:
+        """Detach a live request into a :class:`MigrationTicket` another
+        engine can adopt (:meth:`migrate_in`), leaving nothing of it here.
+
+        A SPECULATING victim rolls back to its last accepted token first
+        (the only legal exit).  RUNNING requests carry their GLASS slot
+        rows; PREFILLING ones are handed off at the current chunk boundary
+        with the partial stat left-fold instead (migration runs between
+        ticks, so ``prefill_pos`` is always chunk-aligned).  An already
+        PREEMPTED_SWAPPED request migrates only when its store is fully
+        private — a store with ``kept`` shared blocks pins physical ids in
+        THIS pool and raises.
+
+        The device state leaves via a FULL swap-out: shared prefix blocks
+        are copied out like private ones (their ids mean nothing in the
+        destination pool) and this request's references released — the
+        source's prefix cache keeps serving other requests unaffected."""
+        e = self.lc.entries.get(uid)
+        if e is None:
+            raise KeyError(f"request {uid} is not live on this engine")
+        if e.state is ReqState.SPECULATING:
+            self._rollback_speculation(e)
+        mid_prefill = e.state is ReqState.PREFILLING
+        glass_rows = None
+        pstats = None
+        if e.state in (ReqState.RUNNING, ReqState.PREFILLING):
+            slot = e.slot
+            if mid_prefill:
+                pstats = jax.device_get(snapshot_stat_sums(e.pstats))
+            elif self.glass_slots is not None:
+                glass_rows = jax.device_get(self.glass_slots.save(slot))
+            if self.glass_slots is not None:
+                self.glass_slots.clear(slot)
+            e.preemptions += 1
+            sw = self.pool.swap_out(slot, full=True)
+            self.swap_bytes += sw.nbytes
+            self.lc.to(e, ReqState.PREEMPTED_SWAPPED)
+            e.slot = -1
+        elif e.state is ReqState.PREEMPTED_SWAPPED:
+            mid_prefill = e.prefill_pos < len(e.req.prompt)
+            sw = e.swap
+            glass_rows = jax.device_get(e.glass_rows) if e.glass_rows is not None else None
+            pstats = jax.device_get(snapshot_stat_sums(e.pstats)) if mid_prefill else None
+            self.swap_store_bytes -= sw.nbytes
+            e.swap_seq = -1
+        else:
+            raise ValueError(
+                f"request {uid} is {e.state.value} — only RUNNING / "
+                "SPECULATING / PREFILLING / PREEMPTED_SWAPPED requests migrate"
+            )
+        wire = self.pool.export_swap(sw)  # raises on kept (non-portable) stores
+        self.lc.to(e, ReqState.MIGRATING)
+        self.lc.detach(e)
+        self._policies.pop(uid, None)
+        e.swap = None
+        e.glass_rows = None
+        e.pstats = None
+        self.migrations_out += 1
+        self.migration_bytes += wire.nbytes
+        return MigrationTicket(
+            req=e.req, sp=e.sp, gp=e.gp, wire=wire,
+            outputs=list(e.outputs), pending=e.pending,
+            replay_left=e.replay_left, rng_pos=e.rng_pos, emitted=e.emitted,
+            preemptions=e.preemptions, prefill_pos=e.prefill_pos,
+            mid_prefill=mid_prefill, glass_rows=glass_rows,
+            glass_key=e.glass_key, pstats=pstats,
+        )
+
+    def migrate_in(self, ticket: MigrationTicket) -> None:
+        """Adopt a migrated request: rebuild its swap store against this
+        pool (cross-pool splice) and install a MIGRATING entry.  The next
+        :meth:`step`'s swap-in tick — where migrated requests compete in
+        the same policy order as ordinary swap-ins, with the same first
+        claim on capacity — splices the blocks and resumes RUNNING (decode)
+        or PREFILLING (mid-prefill handoff)."""
+        r = ticket.req
+        e = LiveRequest(req=r)
+        e.state = ReqState.MIGRATING
+        e.sp, e.gp = ticket.sp, ticket.gp
+        e.outputs = list(ticket.outputs)
+        e.pending = ticket.pending
+        e.replay_left = ticket.replay_left
+        e.rng_pos = ticket.rng_pos
+        e.emitted = ticket.emitted
+        e.preemptions = ticket.preemptions
+        e.prefill_pos = ticket.prefill_pos
+        e.cached_rows = 0  # no shared blocks survive a cross-pool move
+        e.glass_key = ticket.glass_key
+        e.swap = self.pool.adopt_wire(ticket.wire)
+        e.glass_rows = ticket.glass_rows
+        e.pstats = restore_stat_sums(ticket.pstats) if ticket.mid_prefill else None
+        # admission-latency telemetry stays with the source engine: the
+        # request was already admitted once, so the destination records
+        # neither a wait nor a first admission
+        e.admitted_step = self.t
+        e.first_admitted_step = 0
+        self.lc.adopt(e)
+        self._policies[r.uid] = (e.sp, e.gp)
+        self._used_uids.add(r.uid)
+        self.migrations_in += 1
+
+    # -- cluster admission inputs -------------------------------------------
+
+    @property
+    def pending_tokens(self) -> int:
+        """Outstanding work in token units: un-prefilled prompt rows plus
+        un-generated tokens, across the engine queue and every live entry.
+        The cluster dispatcher's load estimate — token counts (not request
+        counts) because GLASS per-request density/draft knobs make requests
+        heterogeneous in cost."""
+        w = 0
+        for r in self.scheduler.queue:
+            w += len(r.prompt) + r.max_new
+        for e in self.lc.entries.values():
+            if e.state is ReqState.FINISHED:
+                continue
+            done = len(e.outputs) - (e.spec_len if e.state is ReqState.SPECULATING else 0)
+            w += max(0, len(e.req.prompt) - e.prefill_pos)
+            w += max(0, e.req.max_new - done)
+        return w
+
+    def admission_cost_inputs(self, prompt=None) -> Dict[str, int]:
+        """The per-replica signals the cluster dispatcher scores admissions
+        with: free blocks net of the watermark reserve and the blocks owed
+        to swapped/migrating requests, queue depth, outstanding token work,
+        and (when ``prompt`` is given) the prefix-cache affinity probe —
+        via the side-effect-free :meth:`BlockPool.peek_prefix`, so probing
+        N replicas neither reorders any LRU nor skews hit-rate stats."""
+        reserved = sum(
+            e.swap.n_blocks
+            for e in self.lc.in_state(ReqState.PREEMPTED_SWAPPED, ReqState.MIGRATING)
+        )
+        free = max(0, self.pool.n_available_blocks - self.pool.watermark - reserved)
+        return dict(
+            free_blocks=free,
+            free_slots=self.pool.n_free_slots,
+            queue_depth=len(self.scheduler),
+            n_active=self.n_active,
+            pending_tokens=self.pending_tokens,
+            prefix_hit=(
+                self.pool.peek_prefix(prompt, self.chunk_tokens)
+                if prompt is not None else 0
+            ),
+        )
 
     @property
     def preempt_count(self) -> int:
@@ -1317,6 +1531,7 @@ class PagedEngine(_QueueEngineBase):
             for e in self.lc.in_state(
                 ReqState.PREFILLING, ReqState.RUNNING, ReqState.SPECULATING,
                 ReqState.PREEMPTED_SWAPPED, ReqState.PREEMPTED_RECOMPUTE,
+                ReqState.MIGRATING,
             )
         ]
 
@@ -1324,7 +1539,7 @@ class PagedEngine(_QueueEngineBase):
         return bool(
             len(self.scheduler)
             or self.pool.active.any()
-            or self.lc.in_state(ReqState.PREEMPTED_SWAPPED)
+            or self.lc.in_state(ReqState.PREEMPTED_SWAPPED, ReqState.MIGRATING)
         )
 
     def _rows_needed(self, r: Request) -> int:
@@ -1347,7 +1562,10 @@ class PagedEngine(_QueueEngineBase):
             return True
         if self.alloc_mode == "full":
             return self.pool.fits(self._rows_needed(r))
-        reserved = sum(e.swap.n_blocks for e in self.lc.in_state(ReqState.PREEMPTED_SWAPPED))
+        reserved = sum(
+            e.swap.n_blocks
+            for e in self.lc.in_state(ReqState.PREEMPTED_SWAPPED, ReqState.MIGRATING)
+        )
         return self.pool.fits_admission(self._first_rows(r), reserved)
 
     # -- per-request policy plumbing ----------------------------------------
@@ -1502,7 +1720,10 @@ class PagedEngine(_QueueEngineBase):
                 self.glass_slots.clear(slot)
             e.swap = self.pool.swap_out(slot)
             self.swap_bytes += e.swap.nbytes
+            self.swap_store_bytes += e.swap.nbytes
+            e.swap_seq = next(self._swap_seq)
             self.lc.to(e, ReqState.PREEMPTED_SWAPPED)
+            self._enforce_swap_cap()
         else:
             # tokens whose computation is dropped and must be replayed
             # (prompt progress + generated prefix written so far)
@@ -1517,6 +1738,42 @@ class PagedEngine(_QueueEngineBase):
             self.lc.to(e, ReqState.PREEMPTED_RECOMPUTE)
             self.scheduler.requeue(e.req)
         e.slot = -1
+
+    def _enforce_swap_cap(self) -> None:
+        """Host swap-store byte cap: while the resident store bytes exceed
+        ``PreemptionConfig.swap_store_cap_bytes``, the OLDEST swapped
+        request degrades to recompute.  Oldest-first because its store has
+        waited longest without a swap-in slot — under sustained pressure it
+        is the most likely to be re-queued behind newer work anyway, and
+        dropping it frees the most bytes for the least expected re-read."""
+        cap = self.preempt_cfg.swap_store_cap_bytes
+        if cap is None:
+            return
+        while self.swap_store_bytes > cap:
+            swapped = self.lc.in_state(ReqState.PREEMPTED_SWAPPED)
+            if not swapped:
+                break
+            self._degrade_swapped(min(swapped, key=lambda x: x.swap_seq))
+
+    def _degrade_swapped(self, e: LiveRequest) -> None:
+        """PREEMPTED_SWAPPED -> PREEMPTED_RECOMPUTE: drop the host store
+        and re-queue for the replay resume (prompt through chunked prefill,
+        generated prefix as forced decode tokens — token-identical by the
+        recompute guarantee).  Shared device blocks the store kept pinned
+        are released like an abort would."""
+        self.swap_store_bytes -= e.swap.nbytes
+        self.recompute_tokens += e.swap.length
+        self.pool.release_swapped(e.swap)
+        e.swap = None
+        e.swap_seq = -1
+        e.glass_rows = None
+        e.pstats = None
+        e.prefill_pos = 0
+        e.glass_key = None
+        e.replay_left = 0
+        self.lc.to(e, ReqState.PREEMPTED_RECOMPUTE)
+        self.scheduler.requeue(e.req)
+        self.swap_cap_evictions += 1
 
     def _preempt_for_capacity(self, protect: Optional[LiveRequest] = None) -> bool:
         """Pick one victim (scheduler policy, mirror of admission order)
@@ -1535,12 +1792,13 @@ class PagedEngine(_QueueEngineBase):
         return True
 
     def _swap_in_tick(self) -> None:
-        """PREEMPTED_SWAPPED -> RUNNING, policy order, as capacity allows.
-        Swapped requests have first claim on freed capacity (the admission
-        filter reserves their blocks), and a swap-in keeps the watermark
-        free unless nothing is running (then waiting would deadlock)."""
+        """PREEMPTED_SWAPPED / MIGRATING -> RUNNING (or PREFILLING for a
+        mid-prefill migration), policy order, as capacity allows.  Swapped
+        requests have first claim on freed capacity (the admission filter
+        reserves their blocks), and a swap-in keeps the watermark free
+        unless nothing is running (then waiting would deadlock)."""
         waiting = sorted(
-            self.lc.in_state(ReqState.PREEMPTED_SWAPPED),
+            self.lc.in_state(ReqState.PREEMPTED_SWAPPED, ReqState.MIGRATING),
             key=lambda e: self.scheduler.admission_key(e.req),
         )
         for e in waiting:
@@ -1549,6 +1807,8 @@ class PagedEngine(_QueueEngineBase):
             reserve = self.pool.watermark if self.pool.active.any() else 0
             if self.pool.has_paged and e.swap.n_blocks + reserve > self.pool.n_available_blocks:
                 return
+            migrating = e.state is ReqState.MIGRATING
+            nbytes = e.swap.nbytes
             slot = self.pool.swap_in(e.swap)
             if slot is None:
                 return
@@ -1557,7 +1817,21 @@ class PagedEngine(_QueueEngineBase):
             e.glass_rows = None
             e.swap = None
             e.slot = slot
-            self.lc.to(e, ReqState.RUNNING)
+            if migrating and e.prefill_pos < len(e.req.prompt):
+                # mid-prefill handoff: the splice restored the partial KV /
+                # state rows and lengths[slot] == prefill_pos (a chunk
+                # boundary); e.pstats carries the partial stat left-fold, so
+                # the ordinary prefill tick continues the fold exactly where
+                # the source stopped
+                e.admitted_step = self.t
+                self.lc.to(e, ReqState.PREFILLING)
+            else:
+                self.lc.to(e, ReqState.RUNNING)
+            if not migrating:
+                # migration tickets were never charged to this engine's
+                # host store (they are transient, first-claim residents)
+                self.swap_store_bytes -= nbytes
+                e.swap_seq = -1
             self.swap_ins += 1
 
     def _admit_tick(self) -> None:
@@ -2304,6 +2578,7 @@ class PagedEngine(_QueueEngineBase):
         for e in self.lc.in_state(
             ReqState.PREFILLING, ReqState.RUNNING,
             ReqState.PREEMPTED_SWAPPED, ReqState.PREEMPTED_RECOMPUTE,
+            ReqState.MIGRATING,
         ):
             if len(e.outputs) > e.emitted:
                 finished.append(self._output(e, finished=False))

@@ -162,6 +162,35 @@ class SwappedRequest:
     kept: List[Tuple[int, int]] = field(default_factory=list)  # (table idx, block id)
 
 
+@dataclass
+class SwappedWire:
+    """Pool-independent serialization of a :class:`SwappedRequest` — the
+    cross-engine migration payload.
+
+    ``leaves`` are host numpy arrays in ``jax.tree.leaves`` order of the
+    cache pytree; the destination pool re-hangs them on its OWN tree
+    structure (:meth:`BlockPool.adopt_wire`), so nothing in the wire
+    references source-pool state.  Only a *full* swap-out is exportable:
+    a ``kept`` list pins physical block ids in the source allocator, and
+    physical ids are meaningless in another pool.
+
+    ``block_size`` / ``nb_max`` stamp the layout the leaves were gathered
+    under — adoption validates them so a wire can never splice into a pool
+    with a different block geometry (the gather/scatter jit shapes, block
+    table width, and row addressing all key off these two).  In-process
+    the wire is a plain dataclass of numpy arrays + ints; a true
+    multi-process transport would pickle/serialize exactly these fields.
+    """
+
+    leaves: List[Any]  # host numpy arrays, jax.tree.leaves(cache) order
+    n_blocks: int
+    n_padded: int
+    length: int
+    nbytes: int
+    block_size: int
+    nb_max: int
+
+
 class BlockAllocator:
     """Refcounted free-list allocator over block ids ``1..num_blocks-1``
     (0 = trash).
@@ -402,6 +431,28 @@ class PrefixCache:
         for e in hit:  # protect the whole path from eviction races
             self._bump(e)
         return best * bs, hit
+
+    def peek(self, prompt, align: int) -> int:
+        """Read-only :meth:`lookup`: the longest resumable cached prefix
+        length (rows) of ``prompt``, with NO side effects — no LRU bump, no
+        eviction pinning, no hit/miss accounting.  Built for the cluster
+        dispatcher, which probes every replica's cache per admission to
+        score prefix affinity: a probe is not a use, so it must not
+        reorder eviction or skew hit-rate telemetry (N-1 of the N probes
+        route nowhere)."""
+        bs = self.block_size
+        key = self._root
+        best = 0
+        for d in range(1, len(prompt) // bs + 1):
+            toks = tuple(int(t) for t in prompt[(d - 1) * bs : d * bs])
+            key = self._child_key(key, toks)
+            e = self.entries.get(key)
+            if e is None or e.tokens != toks:
+                break
+            rows = d * bs
+            if e.resumable and rows % align == 0 and rows <= len(prompt) - 1:
+                best = rows
+        return best
 
     def insert_chain(
         self,
@@ -942,6 +993,17 @@ class BlockPool:
             pc.misses += 1
         return fork, entries
 
+    def peek_prefix(self, prompt, align: int) -> int:
+        """Side-effect-free probe: rows of the longest resumable cached
+        prefix of ``prompt``, mutating neither LRU order nor hit/miss
+        telemetry (the cluster dispatcher probes all replicas per
+        admission; only the routed-to replica's :meth:`lookup_prefix`
+        counts as a use).  See :meth:`PrefixCache.peek`."""
+        pc = self.prefix_cache
+        if pc is None:
+            return 0
+        return pc.peek(prompt, align)
+
     def cancel_prefix_hit(self, fork: int) -> None:
         """Undo one :meth:`lookup_prefix` hit's telemetry: the admission
         could not bind the chain (pinning it consumed the very slack the
@@ -998,13 +1060,20 @@ class BlockPool:
         p = pow2_bucket(max(1, len(blocks)), max(1, self.nb_max))
         return list(blocks) + [BlockAllocator.TRASH] * (p - len(blocks))
 
-    def swap_out(self, slot: int) -> SwappedRequest:
+    def swap_out(self, slot: int, *, full: bool = False) -> SwappedRequest:
         """Copy the slot's PRIVATE blocks + state rows to host and free
         everything it exclusively owns.  Shared (prefix-cache-registered)
         blocks are SKIPPED: they stay on device with this request's
         ownership reference intact (immutable + pinned, so no bytes move
         and no eviction can reclaim them), and :meth:`swap_in` splices the
         same physical ids back into the rebuilt table.
+
+        ``full=True`` disables the shared-block skip: EVERY held block is
+        gathered to host and this slot's references released (shared ones
+        decref — the cache retains fully-released registered blocks for
+        other requests).  That is the migration form: the resulting store
+        pins nothing device-side, so :meth:`export_swap` can carry it to a
+        different pool.
 
         The returned :class:`SwappedRequest` is the request's complete
         device state; :meth:`swap_in` restores it bit-identical."""
@@ -1013,7 +1082,8 @@ class BlockPool:
         blocks = list(self._held.get(slot, ()))
         pc = self.prefix_cache
         keep = (
-            {b for b in blocks if b in pc.by_block} if pc is not None else set()
+            {b for b in blocks if b in pc.by_block}
+            if pc is not None and not full else set()
         )
         kept = [(i, b) for i, b in enumerate(blocks) if b in keep]
         priv = [b for b in blocks if b not in keep]
@@ -1035,6 +1105,48 @@ class BlockPool:
         # its ownership of the kept (shared) blocks through to swap-in
         self._release_slot(slot, priv)
         return sw
+
+    def export_swap(self, sw: SwappedRequest) -> SwappedWire:
+        """Flatten a *full* swap store into the pool-independent
+        :class:`SwappedWire` migration payload.  Raises on a store with
+        ``kept`` blocks — those are physical ids pinned in THIS pool's
+        allocator, meaningless anywhere else (use ``swap_out(slot,
+        full=True)`` for a migration-bound swap)."""
+        if sw.kept:
+            raise ValueError(
+                "swap store pins shared device blocks and is not portable — "
+                "migration requires a full swap-out (swap_out(slot, full=True))"
+            )
+        return SwappedWire(
+            leaves=[np.asarray(l) for l in jax.tree.leaves(sw.host)],
+            n_blocks=sw.n_blocks, n_padded=sw.n_padded,
+            length=sw.length, nbytes=sw.nbytes,
+            block_size=self.block_size, nb_max=self.nb_max,
+        )
+
+    def adopt_wire(self, wire: SwappedWire) -> SwappedRequest:
+        """Rebuild a migrated store against THIS pool: re-hang the wire's
+        host leaves on this pool's cache tree structure so :meth:`swap_in`
+        can splice them (cross-pool splice).  Validates the block geometry
+        — the scatter addresses rows as ``block * block_size + offset`` and
+        pads tables to ``nb_max``, so a geometry mismatch would land rows
+        at the wrong logical positions rather than fail loudly."""
+        if wire.block_size != self.block_size or wire.nb_max != self.nb_max:
+            raise ValueError(
+                f"wire layout (block_size={wire.block_size}, nb_max={wire.nb_max}) "
+                f"does not match pool (block_size={self.block_size}, nb_max={self.nb_max})"
+            )
+        structure = jax.tree.structure(self.cache)
+        if structure.num_leaves != len(wire.leaves):
+            raise ValueError(
+                f"wire carries {len(wire.leaves)} leaves, pool cache has "
+                f"{structure.num_leaves} — different model layout"
+            )
+        host = jax.tree.unflatten(structure, wire.leaves)
+        return SwappedRequest(
+            host=host, n_blocks=wire.n_blocks, n_padded=wire.n_padded,
+            length=wire.length, nbytes=wire.nbytes, kept=[],
+        )
 
     def swap_in(self, sw: SwappedRequest) -> Optional[int]:
         """Restore a swapped request into a fresh slot, re-allocating its

@@ -4,15 +4,17 @@ Every request the :class:`~repro.serve.engine.PagedEngine` touches owns one
 :class:`LiveRequest` entry that moves through an explicit state machine::
 
     WAITING ──▶ PREFILLING ──▶ RUNNING ◀──▶ SPECULATING
-                   │   ▲          │  ▲      (draft k + verify k+1; commit
-                   │   │          │  │       or rollback returns to RUNNING)
-                   │   │          │  │ (swap-in restores KV bit-exact)
-                   │   │          ▼  │
-                   │   │   PREEMPTED_SWAPPED          RUNNING ──▶ FINISHED
-                   │   │          │
+                   │   ▲ │        │  ▲      (draft k + verify k+1; commit
+                   │   │ │        │  │       or rollback returns to RUNNING)
+                   │   │ │        │  │ (swap-in restores KV bit-exact)
+                   │   │ │        ▼  │
+                   │   │ └─▶ PREEMPTED_SWAPPED ──▶ MIGRATING
+                   │   │          │       (host store handed to another
+                   │   │          │        engine; swap-in there resumes
+                   │   │          │        RUNNING / PREFILLING bit-exact)
                    │   │          ▼ (requeue; replay prompt + generated
                    │   └── PREEMPTED_RECOMPUTE     prefix through prefill)
-                   └──────────────▲
+                   └──────────────▲            RUNNING ──▶ FINISHED
 
 ``SPECULATING`` is the self-speculative decode sub-phase: the slot holds
 *unverified* draft KV rows, provisionally extended outputs, and possibly
@@ -74,6 +76,26 @@ into a block with other owners (rollback rows live strictly past the
 prompt — the pool raises if that invariant is ever violated), and an
 abort in any state — including mid-prefill while holding shared blocks,
 or while swapped out — releases exactly the references the request holds.
+
+**Cross-engine migration (replica-sharded serving).**  ``MIGRATING`` is
+the leg of the PREEMPTED_SWAPPED path a request takes when its host swap
+store is in flight between two engines: the source performs a *full*
+swap-out (shared prefix blocks are copied out too — physical block ids
+are meaningless in another pool), records ``PREEMPTED_SWAPPED →
+MIGRATING``, and detaches the entry; the destination adopts the entry in
+MIGRATING and its swap-in tick splices the blocks + GLASS slot rows +
+recurrent-state rows into its own pool, resuming at RUNNING (decode) or
+PREFILLING (a chunk-boundary-aligned mid-prefill handoff whose partial
+GLASS stat left-fold rides along and keeps accumulating).  An abort while
+MIGRATING drops the host store — by construction it pins nothing on
+either device, so both sides are already released.
+
+The swap path also enforces a host-side *store cap*
+(:attr:`PreemptionConfig.swap_store_cap_bytes`): when the resident bytes
+of all swap stores would exceed it, the oldest swapped request degrades
+``PREEMPTED_SWAPPED → PREEMPTED_RECOMPUTE`` — its host copy is dropped
+and the replay path (identical by the recompute guarantee above) serves
+the resume instead.
 """
 from __future__ import annotations
 
@@ -91,6 +113,7 @@ class ReqState(str, Enum):
     SPECULATING = "speculating"
     PREEMPTED_SWAPPED = "preempted_swapped"
     PREEMPTED_RECOMPUTE = "preempted_recompute"
+    MIGRATING = "migrating"  # host swap store in flight between engines
     FINISHED = "finished"
 
 
@@ -102,6 +125,11 @@ _LEGAL = {
     ReqState.PREFILLING: {
         ReqState.RUNNING,  # even max_new == 1 passes through RUNNING to finish
         ReqState.PREEMPTED_RECOMPUTE,  # partial prefill is cheaper to redo than to swap
+        # migration-only: a chunk-boundary handoff swaps the partial prefill
+        # out (KV blocks + state rows; the stat left-fold travels host-side)
+        # so the destination engine resumes it without replaying — the cost
+        # model's own preemption still always recomputes prefill victims
+        ReqState.PREEMPTED_SWAPPED,
         ReqState.FINISHED,  # abort mid-prefill (slot + blocks released first)
     },
     ReqState.RUNNING: {
@@ -122,11 +150,20 @@ _LEGAL = {
     ReqState.SPECULATING: {ReqState.RUNNING},
     ReqState.PREEMPTED_SWAPPED: {
         ReqState.RUNNING,
+        ReqState.MIGRATING,  # host store handed to another engine
+        # swap-store cap overflow: the oldest store is dropped and the
+        # request degrades to the recompute-replay resume path
+        ReqState.PREEMPTED_RECOMPUTE,
         ReqState.FINISHED,  # abort: the host-side swap store is dropped
     },
     ReqState.PREEMPTED_RECOMPUTE: {
         ReqState.PREFILLING,
         ReqState.FINISHED,  # abort: the queued replay is cancelled
+    },
+    ReqState.MIGRATING: {
+        ReqState.RUNNING,  # destination swap-in: decode resumes
+        ReqState.PREFILLING,  # destination swap-in: mid-prefill handoff resumes
+        ReqState.FINISHED,  # abort in flight: the host store pins nothing
     },
     ReqState.FINISHED: set(),
 }
@@ -177,7 +214,8 @@ class LiveRequest:
     pstats: Any = None  # running-sum GLASS stats while PREFILLING
     glass_rows: Any = None  # saved per-slot GLASS rows while PREEMPTED_SWAPPED
     glass_key: Optional[bytes] = None  # host active-block-list key (block_sparse)
-    swap: Any = None  # BlockPool SwappedRequest while PREEMPTED_SWAPPED
+    swap: Any = None  # BlockPool SwappedRequest while PREEMPTED_SWAPPED / MIGRATING
+    swap_seq: int = -1  # swap-out order (cap overflow degrades the oldest store)
     admitted_step: int = -1  # latest admission (for prefill ordering)
     first_admitted_step: int = -1  # first admission (admission-latency metric)
     preemptions: int = 0
@@ -234,6 +272,27 @@ class Lifecycle:
             # prune so a long-lived engine stays O(in-flight), not O(served)
             del self.entries[e.uid]
 
+    def detach(self, e: LiveRequest) -> None:
+        """Remove a MIGRATING entry from this lifecycle: its host store (and
+        with it the request) now belongs to another engine's lifecycle.  The
+        PREEMPTED_SWAPPED → MIGRATING transition must already be recorded —
+        detaching any other state would bypass the legality checker."""
+        if e.state is not ReqState.MIGRATING:
+            raise ValueError(f"detach of non-migrating entry (uid={e.uid}, {e.state.value})")
+        if self.entries.get(e.uid) is e:
+            del self.entries[e.uid]
+
+    def adopt(self, e: LiveRequest) -> None:
+        """Install a MIGRATING entry detached from another engine's
+        lifecycle.  The entry arrives mid-machine (its transition history
+        lives with the source), so adoption only checks liveness and state —
+        every later move goes through :meth:`to` as usual."""
+        if e.state is not ReqState.MIGRATING:
+            raise ValueError(f"adopt of non-migrating entry (uid={e.uid}, {e.state.value})")
+        if e.uid in self.entries and self.entries[e.uid].state is not ReqState.FINISHED:
+            raise ValueError(f"request {e.uid} is already live")
+        self.entries[e.uid] = e
+
     def in_state(self, *states: ReqState) -> List[LiveRequest]:
         return [e for e in self.entries.values() if e.state in states]
 
@@ -246,12 +305,17 @@ class Lifecycle:
         raise KeyError(f"no live entry bound to slot {slot}")
 
     def preempted(self, *, kind: Optional[str] = None) -> int:
-        """Total preemption transitions taken (optionally one kind)."""
+        """Total preemption transitions taken (optionally one kind).  The
+        swap-cap degrade (PREEMPTED_SWAPPED → PREEMPTED_RECOMPUTE) is not a
+        new preemption event — that victim was already counted at swap-out
+        — so it is excluded here (the engine tallies it separately)."""
         total = 0
         for (src, dst), n in self.counts.items():
             if dst == ReqState.PREEMPTED_SWAPPED.value and kind in (None, "swap"):
                 total += n
-            elif dst == ReqState.PREEMPTED_RECOMPUTE.value and kind in (None, "recompute"):
+            elif (dst == ReqState.PREEMPTED_RECOMPUTE.value
+                  and src != ReqState.PREEMPTED_SWAPPED.value
+                  and kind in (None, "recompute")):
                 total += n
         return total
 
@@ -269,16 +333,28 @@ class PreemptionConfig:
     ``watermark_blocks`` is the free-block reserve that *admissions* must
     leave untouched (running requests may grow into it), so a fresh
     admission cannot instantly force a preemption.
+
+    ``swap_store_cap_bytes`` bounds the host-side residency of swap
+    stores: when a new swap-out would push the engine's total resident
+    store bytes past the cap, the OLDEST swapped request degrades to
+    recompute (its store is dropped, it re-queues for the replay resume —
+    streams stay identical by the recompute guarantee).  ``None`` (the
+    default) leaves the store unbounded.
     """
 
     mode: str = "auto"  # auto | swap | recompute
     swap_cost_per_block: float = 2.0
     recompute_cost_per_token: float = 1.0
     watermark_blocks: int = 1
+    swap_store_cap_bytes: Optional[int] = None
 
     def __post_init__(self):
         if self.mode not in ("auto", "swap", "recompute"):
             raise ValueError(f"unknown preemption mode {self.mode!r}")
+        if self.swap_store_cap_bytes is not None and self.swap_store_cap_bytes < 0:
+            raise ValueError(
+                f"swap_store_cap_bytes must be >= 0 or None, got {self.swap_store_cap_bytes}"
+            )
 
 
 def preemption_kind(cfg: PreemptionConfig, blocks_held: int, tokens_to_replay: int) -> str:

@@ -37,10 +37,21 @@ class ProgramCache:
     compiled so far.  ``snapshot`` + ``misses_since`` give the churn between
     two points of a run — zero across a replay of an identical workload is
     the invariant the engines maintain.
+
+    ``namespace`` scopes the reported names (``"replica1/decode"``): every
+    engine owns its OWN registry (so cluster replicas can never collide on
+    a ``register`` name, and each replica's programs follow its params onto
+    its own device slice), and the namespace is what keeps the per-replica
+    populations tellable apart when a cluster aggregates them for the
+    churn accounting.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, namespace: str = "") -> None:
         self._fns: Dict[str, Callable] = {}
+        self.namespace = namespace
+
+    def _qual(self, name: str) -> str:
+        return f"{self.namespace}/{name}" if self.namespace else name
 
     def register(
         self,
@@ -67,8 +78,9 @@ class ProgramCache:
         return int(sz())
 
     def sizes(self) -> Dict[str, int]:
-        """Compiled-variant count per registered program."""
-        return {name: self._count(fn) for name, fn in self._fns.items()}
+        """Compiled-variant count per registered program (namespace-qualified
+        names when a namespace is set)."""
+        return {self._qual(name): self._count(fn) for name, fn in self._fns.items()}
 
     def total(self) -> int:
         return sum(self.sizes().values())

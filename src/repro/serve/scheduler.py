@@ -179,6 +179,16 @@ class Scheduler:
             return None
         return min(candidates, key=self.victim_key)
 
+    def drain_arrived(self, now: int) -> List[Request]:
+        """Every arrived request, in policy order — the cluster dispatcher's
+        global-queue drain.  The cluster holds ONE of these schedulers as
+        its global queue (same FIFO / PRIORITY / DEADLINE ranks as the
+        per-engine queues), pops arrivals in policy order, and routes each
+        to a replica; because the replicas re-sort their own queues under
+        the SAME policy, dispatch order is preserved end-to-end and an
+        N=1 cluster admits in exactly the single-engine order."""
+        return self.pop_admissible(now, len(self.queue))
+
     def pop_admissible(
         self,
         now: int,

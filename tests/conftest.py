@@ -44,6 +44,14 @@ def pytest_configure(config):
         "prefill); CI runs it as its own lane under PREFIX_GLASS_MODE=fused "
         "and PREFIX_GLASS_MODE=block_sparse",
     )
+    config.addinivalue_line(
+        "markers",
+        "cluster: replica-sharded serving suite (ClusterEngine global-queue "
+        "dispatch, bit-identical cross-replica migration, swap-store cap, "
+        "per-replica device placement); CI runs it as its own lane with "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=8, excluded from "
+        "tier-1",
+    )
 
 
 # ATTN_MODE=paged_pallas reruns the whole serving corpus through the fused

@@ -115,11 +115,20 @@ def test_lifecycle_transition_legality():
         lc.to(e, ReqState.RUNNING)  # must prefill first
     lc.to(e, ReqState.PREFILLING)
     with pytest.raises(ValueError, match="illegal transition"):
-        lc.to(e, ReqState.PREEMPTED_SWAPPED)  # partial prefill is recompute-only
-    lc.to(e, ReqState.RUNNING)
+        lc.to(e, ReqState.SPECULATING)  # speculation is a RUNNING sub-phase
+    # mid-prefill swap-out is the migration handoff: partial prefill travels
+    # to another engine at a chunk boundary instead of being recomputed
     lc.to(e, ReqState.PREEMPTED_SWAPPED)
     with pytest.raises(ValueError, match="illegal transition"):
-        lc.to(e, ReqState.PREEMPTED_RECOMPUTE)  # swapped resumes by swap-in only
+        lc.to(e, ReqState.PREFILLING)  # swapped resumes via swap-in only
+    lc.to(e, ReqState.MIGRATING)
+    lc.to(e, ReqState.PREFILLING)  # destination resumes the partial prefill
+    lc.to(e, ReqState.RUNNING)
+    lc.to(e, ReqState.PREEMPTED_SWAPPED)
+    # swap-store cap overflow: the swapped store is dropped and the victim
+    # degrades to recompute (counted as a degrade, not a new preemption)
+    lc.to(e, ReqState.PREEMPTED_RECOMPUTE)
+    lc.to(e, ReqState.PREFILLING)
     lc.to(e, ReqState.RUNNING)
     lc.to(e, ReqState.FINISHED)
     with pytest.raises(ValueError, match="illegal transition"):
@@ -130,8 +139,10 @@ def test_lifecycle_transition_legality():
     with pytest.raises(ValueError, match="already live"):
         lc.add(Request(uid=0, prompt=np.zeros(4, np.int32), max_new=2))
     assert lc.counts[("running", "preempted_swapped")] == 1
-    assert lc.preempted() == 1 and lc.preempted(kind="swap") == 1
-    assert lc.preempted(kind="recompute") == 0
+    assert lc.counts[("prefilling", "preempted_swapped")] == 1
+    assert lc.counts[("preempted_swapped", "preempted_recompute")] == 1
+    assert lc.preempted() == 2 and lc.preempted(kind="swap") == 2
+    assert lc.preempted(kind="recompute") == 0  # degrade is not a new event
 
 
 def test_submit_rejects_live_uid_allows_finished_reuse():
